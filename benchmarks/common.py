@@ -1,0 +1,49 @@
+"""Shared benchmark utilities: CI computation + CSV emission (one file per
+paper figure, `name,us_per_call,derived` rows for run.py)."""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Dict, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import SwarmConfig
+from repro.swarm import STRATEGY_NAMES, run_many
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts")
+
+# paper: 50 runs / 95% CI.  The bench default trades Monte-Carlo count for
+# wall time on this 1-core container; REPRO_FULL_RUNS=1 restores 50.
+DEFAULT_RUNS = 50 if os.environ.get("REPRO_FULL_RUNS") == "1" else 16
+
+
+def ci95(x: np.ndarray):
+    m = x.mean()
+    half = 1.96 * x.std(ddof=1) / np.sqrt(len(x)) if len(x) > 1 else 0.0
+    return m, half
+
+
+def timed_sweep(cfg: SwarmConfig, strategies: Sequence[int], n: int,
+                runs: int, key=None) -> Dict[str, Dict]:
+    key = jax.random.PRNGKey(0) if key is None else key
+    out = {}
+    for s in strategies:
+        t0 = time.perf_counter()
+        m = run_many(key, cfg, jnp.int32(s), n, runs)
+        m = {k: np.asarray(v) for k, v in m.items()}
+        m["_wall_s"] = time.perf_counter() - t0
+        out[STRATEGY_NAMES[s]] = m
+    return out
+
+
+def write_csv(path: str, header: str, rows):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(header + "\n")
+        for r in rows:
+            f.write(",".join(str(x) for x in r) + "\n")
+    print(f"wrote {path} ({len(rows)} rows)")

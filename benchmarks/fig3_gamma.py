@@ -1,0 +1,32 @@
+"""Paper Fig. 3: γ sensitivity — average latency vs outstanding workload."""
+from __future__ import annotations
+
+import dataclasses
+import os
+
+import jax.numpy as jnp
+
+from benchmarks.common import ART, DEFAULT_RUNS, ci95, timed_sweep, write_csv
+from repro.configs.base import SwarmConfig
+from repro.swarm import DISTRIBUTED
+
+
+def run(gammas=(0.002, 0.01, 0.02, 0.05, 0.1, 0.3), n=30, runs=DEFAULT_RUNS):
+    rows = []
+    for g in gammas:
+        cfg = dataclasses.replace(SwarmConfig(num_workers=n), gamma=g)
+        m = timed_sweep(cfg, [DISTRIBUTED], n, runs)["Distributed"]
+        lat, lat_ci = ci95(m["avg_latency_s"])
+        rem, rem_ci = ci95(m["remaining_gflops"])
+        tx, _ = ci95(m["transfers"])
+        rows.append([g, f"{lat:.6g}", f"{lat_ci:.3g}", f"{rem:.6g}",
+                     f"{rem_ci:.3g}", f"{tx:.1f}"])
+        print(f"γ={g:<6} latency={lat:.4g}s rem={rem:.5g} transfers={tx:.0f}")
+    write_csv(os.path.join(ART, "fig3_gamma.csv"),
+              "gamma,latency_s,latency_ci,remaining_gflops,remaining_ci,"
+              "transfers", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,38 @@
+"""Paper Fig. 4: all six metrics vs number of workers (10-50), 5 strategies."""
+from __future__ import annotations
+
+import dataclasses
+import os
+
+import numpy as np
+
+from benchmarks.common import ART, DEFAULT_RUNS, ci95, timed_sweep, write_csv
+from repro.configs.base import SwarmConfig
+
+METRICS = ["avg_latency_s", "remaining_gflops", "avg_transfer_time_s",
+           "jain_fairness", "energy_per_task_j", "fom"]
+
+
+def run(workers=(10, 20, 30, 40, 50), runs=DEFAULT_RUNS, sim_time=None):
+    rows = []
+    for n in workers:
+        cfg = SwarmConfig(num_workers=n)
+        if sim_time:
+            cfg = dataclasses.replace(cfg, sim_time_s=sim_time)
+        res = timed_sweep(cfg, range(5), n, runs)
+        for name, m in res.items():
+            row = [n, name]
+            for k in METRICS:
+                mean, half = ci95(m[k])
+                row += [f"{mean:.6g}", f"{half:.3g}"]
+            rows.append(row)
+            print(f"N={n:3d} {name:14s} " + " ".join(
+                f"{k.split('_')[0][:4]}={ci95(m[k])[0]:.4g}" for k in METRICS))
+    hdr = "workers,strategy," + ",".join(
+        f"{k},{k}_ci95" for k in METRICS)
+    write_csv(os.path.join(ART, "fig4_workers.csv"), hdr, rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,34 @@
+"""Paper Fig. 5: latency / remaining GFLOPs / FOM vs task arrival period
+(60→100 ms) at 30 workers."""
+from __future__ import annotations
+
+import dataclasses
+import os
+
+from benchmarks.common import ART, DEFAULT_RUNS, ci95, timed_sweep, write_csv
+from repro.configs.base import SwarmConfig
+
+
+def run(periods_ms=(60, 70, 80, 90, 100), n=30, runs=DEFAULT_RUNS):
+    rows = []
+    for p in periods_ms:
+        cfg = dataclasses.replace(SwarmConfig(num_workers=n),
+                                  task_period_s=p / 1000.0)
+        res = timed_sweep(cfg, range(5), n, runs)
+        for name, m in res.items():
+            lat, lat_ci = ci95(m["avg_latency_s"])
+            rem, rem_ci = ci95(m["remaining_gflops"])
+            fom, fom_ci = ci95(m["fom"])
+            rows.append([p, name, f"{lat:.6g}", f"{lat_ci:.3g}",
+                         f"{rem:.6g}", f"{rem_ci:.3g}", f"{fom:.6g}",
+                         f"{fom_ci:.3g}"])
+            print(f"period={p}ms {name:14s} lat={lat:.4g} rem={rem:.5g} "
+                  f"fom={fom:.5g}")
+    write_csv(os.path.join(ART, "fig5_rate.csv"),
+              "period_ms,strategy,latency_s,latency_ci,remaining_gflops,"
+              "remaining_ci,fom,fom_ci", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,36 @@
+"""Paper Fig. 7: congestion-aware early exit on/off — accuracy, latency,
+remaining GFLOPs, fairness, energy, FOM vs workers (Distributed strategy)."""
+from __future__ import annotations
+
+import dataclasses
+import os
+
+from benchmarks.common import ART, DEFAULT_RUNS, ci95, timed_sweep, write_csv
+from repro.configs.base import SwarmConfig
+from repro.swarm import DISTRIBUTED
+
+METRICS = ["avg_accuracy", "avg_latency_s", "remaining_gflops",
+           "jain_fairness", "energy_per_task_j", "fom"]
+
+
+def run(workers=(10, 20, 30, 40, 50), runs=DEFAULT_RUNS):
+    rows = []
+    for n in workers:
+        for ee in (False, True):
+            cfg = dataclasses.replace(SwarmConfig(num_workers=n),
+                                      early_exit_enabled=ee)
+            m = timed_sweep(cfg, [DISTRIBUTED], n, runs)["Distributed"]
+            row = [n, "on" if ee else "off"]
+            for k in METRICS:
+                mean, half = ci95(m[k])
+                row += [f"{mean:.6g}", f"{half:.3g}"]
+            rows.append(row)
+            print(f"N={n:3d} early_exit={'on ' if ee else 'off'} " + " ".join(
+                f"{k.split('_')[0][:4]}={ci95(m[k])[0]:.4g}" for k in METRICS))
+    hdr = "workers,early_exit," + ",".join(f"{k},{k}_ci95" for k in METRICS)
+    write_csv(os.path.join(ART, "fig7_earlyexit.csv"), hdr, rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,72 @@
+"""§Perf hillclimb driver: re-cost selected cells under config variants
+(hypothesis → change → re-lower → re-analyse), tagging each artifact.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb --cell qwen3-moe-30b-a3b:train_4k \
+        --variant dots --variant bf16gather --variant dots+bf16gather+losschunk
+"""
+from __future__ import annotations
+
+import sys
+
+# must run through dryrun's XLA_FLAGS preamble
+from repro.launch import dryrun  # noqa: E402  (sets device count first)
+
+import argparse        # noqa: E402
+import dataclasses     # noqa: E402
+import json            # noqa: E402
+import os              # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+
+VARIANTS = {
+    # paper-faithful baseline = untagged artifact from the sweep
+    "dots": dict(remat_policy="dots"),
+    "noremat": dict(remat_policy="none"),
+    "bf16gather": dict(cast_weights_bf16=True),
+    "losschunk": dict(loss_chunk=512),
+    "attnchunk2k": dict(attn_chunk=2048),
+    "nofsdpserve": dict(serve_param_fsdp=False),
+    "puredp": dict(pure_dp=True),
+}
+
+
+def variant_cfg(arch: str, spec: str):
+    cfg = get_config(arch)
+    kw = {}
+    for part in spec.split("+"):
+        if part == "chunkremat":
+            cfg = dataclasses.replace(
+                cfg, ssm=dataclasses.replace(cfg.ssm, chunk_remat=True))
+        else:
+            kw.update(VARIANTS[part])
+    return dataclasses.replace(cfg, **kw)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", action="append", required=True,
+                    help="arch:shape")
+    ap.add_argument("--variant", action="append", required=True,
+                    help="'+'-joined keys from VARIANTS")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    out = os.path.join(os.path.normpath(dryrun.ARTIFACT_DIR), "single")
+    for cell in args.cell:
+        arch, shape = cell.split(":")
+        for v in args.variant:
+            cfg = variant_cfg(arch, v)
+            rec = dryrun.run_cell(arch, shape, "single", out,
+                                  force=args.force, cfg_override=cfg,
+                                  tag=f"@{v}")
+            if rec["status"] == "OK":
+                r = rec["roofline"]
+                print(f"  {cell}@{v}: dom={r['dominant']} "
+                      f"comp={r['compute_s']*1e3:.1f}ms "
+                      f"mem={r['memory_s']*1e3:.1f}ms "
+                      f"coll={r['collective_s']*1e3:.1f}ms "
+                      f"useful={rec['useful_flop_ratio']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

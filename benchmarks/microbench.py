@@ -1,0 +1,69 @@
+"""Kernel-path microbenchmarks (CPU ref path; µs/call).  The Pallas kernels
+themselves target TPU — interpret-mode timings are not meaningful, so this
+times the dispatch path the models actually execute here."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+
+def bench(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    rows = []
+
+    q = jax.random.normal(key, (1, 512, 8, 64), jnp.float32)
+    kv = jax.random.normal(key, (1, 512, 2, 64), jnp.float32)
+    fa = jax.jit(lambda q, k, v: ref.flash_attention(q, k, v))
+    rows.append(("flash_attention_ref_512", bench(fa, q, kv, kv),
+                 "B1_S512_H8_kv2_hd64"))
+
+    qd = jax.random.normal(key, (4, 8, 64), jnp.float32)
+    kd = jax.random.normal(key, (4, 4096, 2, 64), jnp.float32)
+    da = jax.jit(lambda q, k, v: ref.decode_attention(q, k, v, 4095))
+    rows.append(("decode_attention_ref_4k", bench(da, qd, kd, kd),
+                 "B4_S4096"))
+
+    a = jax.random.uniform(key, (2, 1024, 256), jnp.float32, 0.5, 0.99)
+    b = jax.random.normal(key, (2, 1024, 256), jnp.float32)
+    rg = jax.jit(ref.rglru_scan)
+    rows.append(("rglru_scan_ref_1k", bench(rg, a, b), "B2_S1024_W256"))
+
+    am = jax.random.uniform(key, (1, 256, 512, 16), jnp.float32, 0.5, 0.99)
+    bm = jax.random.normal(key, (1, 256, 512, 16), jnp.float32) * 0.1
+    Cm = jax.random.normal(key, (1, 256, 16), jnp.float32)
+    ms = jax.jit(ref.mamba_scan)
+    rows.append(("mamba_scan_ref_256", bench(ms, am, bm, Cm),
+                 "B1_S256_D512_N16"))
+
+    F = jax.random.uniform(key, (8, 256), jnp.float32, 100, 500)
+    dtx = jnp.where(jax.random.bernoulli(key, 0.3, (8, 256, 256)),
+                    1e-3, -1e30)
+    dp = jax.jit(ref.diffusive_phi)
+    rows.append(("diffusive_phi_ref_256", bench(dp, 1.0 / F, F, dtx),
+                 "R8_N256"))
+
+    x = jax.random.normal(key, (4096, 1024), jnp.float32)
+    s = jnp.ones((1024,))
+    rn = jax.jit(ref.rmsnorm)
+    rows.append(("rmsnorm_ref_4k", bench(rn, x, s), "R4096_D1024"))
+
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,65 @@
+"""§Roofline table: reads the dry-run JSON artifacts and renders the
+three-term analysis per (arch × shape) on the single-pod mesh, plus the
+multi-pod compile census."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import ART, write_csv
+
+DRY = os.path.join(ART, "dryrun")
+
+
+def load(mesh: str):
+    d = os.path.join(DRY, mesh)
+    recs = []
+    if not os.path.isdir(d):
+        return recs
+    for f in sorted(os.listdir(d)):
+        if f.endswith(".json"):
+            r = json.load(open(os.path.join(d, f)))
+            # §Perf variants are tagged '<arch>__<shape>@<variant>.json'
+            if "@" in f:
+                r = dict(r, shape=r["shape"] + "@" + f.split("@")[1][:-5])
+            recs.append(r)
+    return recs
+
+
+def run():
+    rows = []
+    for rec in load("single"):
+        if rec["status"] == "SKIP":
+            rows.append([rec["arch"], rec["shape"], "SKIP", "", "", "", "",
+                         "", "", rec["reason"][:60]])
+            continue
+        if rec["status"] != "OK":
+            rows.append([rec["arch"], rec["shape"], "FAIL", "", "", "", "",
+                         "", "", rec.get("error", "")[:60]])
+            continue
+        r = rec["roofline"]
+        rows.append([
+            rec["arch"], rec["shape"], "OK",
+            f"{r['compute_s']:.4g}", f"{r['memory_s']:.4g}",
+            f"{r['collective_s']:.4g}", r["dominant"],
+            f"{rec['useful_flop_ratio']:.3f}",
+            f"{rec['memory'].get('peak_estimate_bytes', 0) / 2**30:.2f}",
+            "",
+        ])
+    write_csv(os.path.join(ART, "roofline.csv"),
+              "arch,shape,status,compute_s,memory_s,collective_s,dominant,"
+              "useful_flop_ratio,peak_gib_per_dev,note", rows)
+
+    multi = load("multi")
+    ok = sum(r["status"] == "OK" for r in multi)
+    skip = sum(r["status"] == "SKIP" for r in multi)
+    fail = [r for r in multi if r["status"] == "FAIL"]
+    print(f"multi-pod: {ok} OK, {skip} SKIP, {len(fail)} FAIL "
+          f"of {len(multi)}")
+    for r in fail:
+        print("  FAIL:", r["arch"], r["shape"], r.get("error", "")[:100])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,54 @@
+"""Benchmark entry point — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (kernel microbench) followed by
+the figure reproductions (Fig. 3-7) and the roofline table from the dry-run
+artifacts.  Env knobs:
+  REPRO_FULL_RUNS=1   use the paper's 50 Monte-Carlo runs (default 16)
+  REPRO_BENCH_FAST=1  tiny sweep for CI smoke (2 runs)
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir, "src"))
+
+FAST = os.environ.get("REPRO_BENCH_FAST") == "1"
+
+
+def main() -> None:
+    from benchmarks import (fig3_gamma, fig4_workers, fig5_rate, fig6_area,
+                            fig7_earlyexit, microbench, roofline)
+
+    print("== microbench (name,us_per_call,derived) ==")
+    microbench.run()
+
+    kw = {"runs": 2} if FAST else {}
+
+    print("\n== Fig. 3: gamma sensitivity ==")
+    fig3_gamma.run(gammas=(0.02, 0.1) if FAST else
+                   (0.002, 0.01, 0.02, 0.05, 0.1, 0.3), **kw)
+    print("\n== Fig. 4: workers sweep ==")
+    fig4_workers.run(workers=(10, 30) if FAST else (10, 20, 30, 40, 50),
+                     **kw)
+    print("\n== Fig. 5: arrival rate ==")
+    fig5_rate.run(periods_ms=(60, 100) if FAST else (60, 70, 80, 90, 100),
+                  **kw)
+    print("\n== Fig. 6: mission area ==")
+    fig6_area.run(areas_km=(20, 40) if FAST else (10, 20, 30, 40), **kw)
+    print("\n== Fig. 7: early exit ==")
+    fig7_earlyexit.run(workers=(10, 30) if FAST else (10, 20, 30, 40, 50),
+                       **kw)
+
+    print("\n== Ablation (ours): arrival burstiness ==")
+    from benchmarks import ablation_burst
+    ablation_burst.run(duties=(0.25, 1.0) if FAST else (0.125, 0.25, 0.5,
+                                                        1.0), **kw)
+
+    print("\n== Roofline (from dry-run artifacts) ==")
+    roofline.run()
+
+
+if __name__ == "__main__":
+    main()

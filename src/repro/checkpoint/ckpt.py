@@ -1,0 +1,122 @@
+"""Sharded checkpointing with elastic re-sharding.
+
+Layout:  <dir>/step_<k>/
+            manifest.json       — step, mesh shape/axes, tree structure,
+                                  per-leaf dtype/shape
+            arrays.npz          — flattened leaves (gathered to host)
+
+Design points for 1000+-node fleets (scaled down to this container):
+  * atomic publish: write to ``step_<k>.tmp`` then rename — a crashed writer
+    never corrupts the latest checkpoint;
+  * retention: keep the newest `keep` checkpoints;
+  * elastic restore: leaves are saved unsharded (host-gathered); on restore
+    they are re-placed under the *current* mesh's NamedShardings, so the
+    mesh shape may change between save and load (elastic scaling);
+  * restart-safe data: the synthetic pipeline is stateless in `step`, so
+    save(step) + restore() resumes bit-identically (tested).
+
+On a real multi-host fleet the np.savez path would be replaced by per-host
+shard files (one writer per data-parallel replica group); the manifest/
+rename/retention logic is unchanged — noted in DESIGN.md.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(p) for p in kp) for kp, _ in flat]
+    leaves = [v for _, v in flat]
+    return paths, leaves, treedef
+
+
+def save(ckpt_dir: str, step: int, tree: Any, *, keep: int = 3,
+         extra: Optional[Dict] = None) -> str:
+    """Atomically persist `tree` (params/opt-state/pytree of arrays)."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    paths, leaves, _ = _flatten_with_paths(tree)
+    host_leaves = [np.asarray(jax.device_get(x)) for x in leaves]
+    np.savez(os.path.join(tmp, "arrays.npz"),
+             **{f"a{i}": v for i, v in enumerate(host_leaves)})
+    manifest = {
+        "step": step,
+        "time": time.time(),
+        "paths": paths,
+        "shapes": [list(v.shape) for v in host_leaves],
+        "dtypes": [str(v.dtype) for v in host_leaves],
+        "extra": extra or {},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    os.rename(tmp, final)
+
+    # retention
+    steps = sorted(all_steps(ckpt_dir))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"),
+                      ignore_errors=True)
+    return final
+
+
+def all_steps(ckpt_dir: str):
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for d in os.listdir(ckpt_dir):
+        if d.startswith("step_") and not d.endswith(".tmp"):
+            out.append(int(d.split("_")[1]))
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = all_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir: str, like: Any, *, step: Optional[int] = None,
+            mesh=None, specs=None) -> Tuple[Any, Dict]:
+    """Restore into the structure of `like`.
+
+    With (mesh, specs) the leaves are placed as NamedSharding-ed global
+    arrays under the *current* mesh — elastic re-sharding across mesh-shape
+    changes is free because leaves are persisted unsharded.
+    """
+    step = latest_step(ckpt_dir) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(d, "arrays.npz"))
+    leaves = [data[f"a{i}"] for i in range(len(manifest["paths"]))]
+
+    like_paths, like_leaves, treedef = _flatten_with_paths(like)
+    if like_paths != manifest["paths"]:
+        missing = set(manifest["paths"]) ^ set(like_paths)
+        raise ValueError(f"checkpoint tree mismatch; differing: {missing}")
+
+    if mesh is not None and specs is not None:
+        from jax.sharding import NamedSharding
+        spec_leaves = jax.tree.leaves(
+            specs, is_leaf=lambda x: isinstance(
+                x, jax.sharding.PartitionSpec))
+        placed = [jax.device_put(v, NamedSharding(mesh, s))
+                  for v, s in zip(leaves, spec_leaves)]
+    else:
+        placed = [jnp.asarray(v) for v in leaves]
+    return jax.tree_util.tree_unflatten(treedef, placed), manifest

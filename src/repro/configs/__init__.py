@@ -1,0 +1,49 @@
+"""Architecture registry: ``get_config(arch_id)`` / ``ARCHS``."""
+from __future__ import annotations
+
+from repro.configs.base import (ALL_SHAPES, DECODE_32K, LONG_500K, PREFILL_32K,
+                                TRAIN_4K, EncDecConfig, HybridConfig,
+                                ModelConfig, MoEConfig, ShapeConfig, SSMConfig,
+                                SwarmConfig, reduced, shape_applicable)
+
+from repro.configs.qwen3_moe_30b_a3b import CONFIG as _qwen3_moe
+from repro.configs.granite_moe_1b_a400m import CONFIG as _granite_moe
+from repro.configs.qwen3_1_7b import CONFIG as _qwen3_17
+from repro.configs.qwen3_4b import CONFIG as _qwen3_4b
+from repro.configs.qwen2_7b import CONFIG as _qwen2_7b
+from repro.configs.qwen2_5_14b import CONFIG as _qwen25_14b
+from repro.configs.recurrentgemma_9b import CONFIG as _rgemma
+from repro.configs.qwen2_vl_2b import CONFIG as _qwen2_vl
+from repro.configs.whisper_medium import CONFIG as _whisper
+from repro.configs.falcon_mamba_7b import CONFIG as _mamba
+
+ARCHS = {
+    c.name: c for c in (
+        _qwen3_moe, _granite_moe, _qwen3_17, _qwen3_4b, _qwen2_7b,
+        _qwen25_14b, _rgemma, _qwen2_vl, _whisper, _mamba,
+    )
+}
+
+SHAPES = {s.name: s for s in ALL_SHAPES}
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    try:
+        return ARCHS[arch_id]
+    except KeyError:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(ARCHS)}")
+
+
+def get_shape(shape_id: str) -> ShapeConfig:
+    try:
+        return SHAPES[shape_id]
+    except KeyError:
+        raise KeyError(f"unknown shape {shape_id!r}; known: {sorted(SHAPES)}")
+
+
+__all__ = [
+    "ARCHS", "SHAPES", "get_config", "get_shape", "reduced",
+    "shape_applicable", "ModelConfig", "ShapeConfig", "SwarmConfig",
+    "MoEConfig", "SSMConfig", "HybridConfig", "EncDecConfig",
+    "TRAIN_4K", "PREFILL_32K", "DECODE_32K", "LONG_500K", "ALL_SHAPES",
+]

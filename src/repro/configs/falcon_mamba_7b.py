@@ -1,0 +1,15 @@
+"""falcon-mamba-7b — 64L d_model=4096 attention-free mamba1, ssm_state=16
+[arXiv:2410.05355]"""
+from repro.configs.base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="falcon-mamba-7b",
+    family="ssm",
+    num_layers=64,
+    d_model=4096,
+    num_heads=0,
+    num_kv_heads=0,
+    d_ff=0,
+    vocab_size=65_024,
+    ssm=SSMConfig(d_state=16, d_conv=4, expand=2, chunk=64),
+)

@@ -1,0 +1,19 @@
+"""granite-moe-1b-a400m — 24L d_model=1024 16H (GQA kv=8) MoE 32e top-8
+[hf:ibm-granite/granite-3.0-1b-a400m-base]"""
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="granite-moe-1b-a400m",
+    family="moe",
+    num_layers=24,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=8,
+    d_ff=512,                       # MoE expert intermediate size
+    vocab_size=49_155,
+    head_dim=64,
+    rope_theta=10_000.0,
+    tie_embeddings=True,
+    moe=MoEConfig(num_experts=32, experts_per_token=8, d_ff_expert=512,
+                  router_norm_topk=False),
+)

@@ -1,0 +1,20 @@
+"""recurrentgemma-9b — 38L d_model=4096 16H (MQA kv=1) d_ff=12288, RG-LRU +
+local attention 1:2 [arXiv:2402.19427]"""
+from repro.configs.base import HybridConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-9b",
+    family="hybrid",
+    num_layers=38,
+    d_model=4096,
+    num_heads=16,
+    num_kv_heads=1,
+    d_ff=12_288,
+    vocab_size=256_000,
+    head_dim=256,
+    act="geglu",
+    rope_theta=10_000.0,
+    tie_embeddings=True,
+    hybrid=HybridConfig(pattern=("rec", "rec", "attn"), lru_width=4096,
+                        conv_width=4, window=2048, c=8.0),
+)

@@ -1,0 +1,23 @@
+"""whisper-medium — enc-dec, 24L(+24L enc) d_model=1024 16H (MHA) d_ff=4096,
+conv frontend stubbed [arXiv:2212.04356]"""
+from repro.configs.base import EncDecConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-medium",
+    family="encdec",
+    num_layers=24,                  # decoder layers
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=4096,
+    vocab_size=51_865,
+    head_dim=64,
+    norm="layernorm",
+    act="gelu",
+    learned_pos=True,
+    qkv_bias=True,
+    attn_out_bias=True,
+    frontend="audio_stub",
+    tie_embeddings=True,
+    encdec=EncDecConfig(encoder_layers=24, source_positions=1500),
+)

@@ -1,0 +1,61 @@
+"""Congestion-aware early exit (paper Eqs. 14-16 + Fig. 2).
+
+    ΔT_i = (T_i(t) - T_i(t-1)) / Δt                    (Eq. 14)
+    D_i  ← D_i + α (ΔT_i - D_i)                        (Eq. 15, EMA)
+    ξ_i  = L_full | L1 | L2  by τ_med / τ_high          (Eq. 16)
+
+After a truncated exit (L1/L2) the task still runs `finalize_layers` extra
+layers to produce its output (paper: +3).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CongestionState(NamedTuple):
+    prev_T: jax.Array    # [N] previous outstanding GFLOPs
+    D: jax.Array         # [N] smoothed derivative
+
+
+def init_congestion(n: int) -> CongestionState:
+    return CongestionState(jnp.zeros((n,), jnp.float32),
+                           jnp.zeros((n,), jnp.float32))
+
+
+def congestion_update(state: CongestionState, T: jax.Array, dt: float,
+                      alpha: float) -> CongestionState:
+    """Eqs. 14-15."""
+    dT = (T - state.prev_T) / dt
+    D = state.D + alpha * (dT - state.D)
+    return CongestionState(T, D)
+
+
+def exit_label(D: jax.Array, tau_med: float, tau_high: float) -> jax.Array:
+    """Eq. 16 → {0: L_full, 1: L1 (medium), 2: L2 (high)} per node."""
+    return jnp.where(D > tau_high, 2, jnp.where(D > tau_med, 1, 0))
+
+
+def exit_boundary_layers(label: jax.Array, exit_points: Tuple[int, int, int],
+                         finalize_layers: int) -> jax.Array:
+    """Total layers executed for a label: full L, or exit point + finalize.
+
+    exit_points = (L1, L2, L_full) per the paper's Table 2 ordering; label 1
+    (medium congestion) exits at L2's *shallower* boundary? No — the paper
+    truncates deeper under *less* congestion: medium → L2(=30)+3, high →
+    L1(=15)+3, full → 60.
+    """
+    L1, L2, L_full = exit_points
+    med = jnp.minimum(L2 + finalize_layers, L_full)
+    high = jnp.minimum(L1 + finalize_layers, L_full)
+    return jnp.where(label == 2, high, jnp.where(label == 1, med, L_full))
+
+
+def exit_accuracy(label: jax.Array, accuracy_levels: Tuple[float, float, float]
+                  ) -> jax.Array:
+    """Table 2: [0.6, 0.9, 0.95] for [high-congestion, medium, full]."""
+    acc_high, acc_med, acc_full = accuracy_levels
+    return jnp.where(label == 2, acc_high,
+                     jnp.where(label == 1, acc_med, acc_full))

@@ -1,0 +1,62 @@
+"""Algorithm 1 — the per-epoch decision logic, as one pure JAX function.
+
+``decision_epoch`` is the protocol core used by (a) the swarm simulator's
+Distributed strategy and (b) the split-compute stage placer.  It consumes
+only one-hop-visible state (adjacency, neighbor φ/U) — the vectorized form
+computes all nodes' decisions at once but never reads beyond M_i(t).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.decision import TransferDecision, transfer_decision
+from repro.core.diffusive import phi_update
+from repro.core.early_exit import (CongestionState, congestion_update,
+                                   exit_boundary_layers, exit_label)
+
+
+class ProtocolState(NamedTuple):
+    phi: jax.Array               # [N] aggregated computation capability
+    congestion: CongestionState  # (prev_T, D) per node
+
+
+class EpochDecision(NamedTuple):
+    decision: TransferDecision   # utilization / target / transfer per node
+    exit_layers: jax.Array       # [N] layers to execute this epoch (Eq. 16)
+    exit_lbl: jax.Array          # [N] 0=full 1=medium 2=high congestion
+    state: ProtocolState
+
+
+def init_protocol(F: jax.Array) -> ProtocolState:
+    n = F.shape[0]
+    return ProtocolState(
+        phi=F,
+        congestion=CongestionState(jnp.zeros((n,), jnp.float32),
+                                   jnp.zeros((n,), jnp.float32)))
+
+
+def decision_epoch(state: ProtocolState, *, F, adj, d_tx, queued_gflops,
+                   gamma: float, dt: float, alpha: float,
+                   tau_med: float, tau_high: float,
+                   exit_points: Tuple[int, int, int],
+                   finalize_layers: int,
+                   early_exit_enabled: bool = True) -> EpochDecision:
+    """One decision epoch at every node (Alg. 1 lines 2-11), vectorized.
+
+    F [N] GFLOP/s, adj [N,N] bool, d_tx [N,N] s/GFLOP, queued_gflops [N].
+    """
+    # line 2: update aggregated capability (Eq. 10)
+    phi = phi_update(state.phi, F, adj, d_tx)
+    # lines 3-5: utilization, least-utilized neighbor, offload predicate
+    dec = transfer_decision(queued_gflops, phi, adj, gamma)
+    # lines 10-11: congestion indicator + exit label
+    cong = congestion_update(state.congestion, queued_gflops, dt, alpha)
+    if early_exit_enabled:
+        lbl = exit_label(cong.D, tau_med, tau_high)
+    else:
+        lbl = jnp.zeros_like(cong.D, dtype=jnp.int32)
+    layers = exit_boundary_layers(lbl, exit_points, finalize_layers)
+    return EpochDecision(dec, layers, lbl, ProtocolState(phi, cong))

@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataConfig, Prefetcher, batch_at
+
+__all__ = ["DataConfig", "batch_at", "Prefetcher"]

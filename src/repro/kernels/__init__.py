@@ -1,0 +1,6 @@
+"""Pallas TPU kernels (pl.pallas_call + BlockSpec VMEM tiling) for the
+framework's compute hot spots, with ``ops.py`` dispatch and ``ref.py``
+pure-jnp oracles.  See DESIGN.md §6 for the tiling rationale."""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,78 @@
+"""Pallas TPU kernel for the diffusive φ update (paper Eq. 10).
+
+The update is a masked max-plus row reduction over the [N, N] link-delay
+matrix — at swarm scale (N in the thousands, R Monte-Carlo runs, every
+200 ms epoch) this is the protocol's compute hot spot.  Tiling: the delay
+matrix streams through VMEM in (BN, BN) tiles; the running row-max and the
+degree count live in VMEM scratch across the column grid dimension (TPU
+grids execute sequentially, so scratch persists over the reduction dim);
+the final combine with 1/F and the degree normalization happens on the last
+column tile.
+
+Grid: (R, N/BN, N/BN) — Monte-Carlo batch × row tiles × column tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+BN = 128  # tile edge (VPU lane-aligned)
+
+
+def _kernel(inv_phi_ref, f_ref, dtx_ref, out_ref, acc_ref, deg_ref):
+    j = pl.program_id(2)
+    nj = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.full_like(acc_ref, NEG)
+        deg_ref[...] = jnp.zeros_like(deg_ref)
+
+    dtx = dtx_ref[0]                             # [BN, BN]; -inf off-link
+    cand = dtx + inv_phi_ref[0][None, :]         # + 1/φ_k
+    acc_ref[...] = jnp.maximum(acc_ref[...], jnp.max(cand, axis=1))
+    deg_ref[...] = deg_ref[...] + jnp.sum(
+        (dtx > NEG / 2).astype(jnp.float32), axis=1)
+
+    @pl.when(j == nj - 1)
+    def _finalize():
+        f = f_ref[0]
+        deg = deg_ref[...]
+        inv_new = (1.0 / f + acc_ref[...]) / (deg + 1.0)
+        out_ref[0] = jnp.where(deg > 0, inv_new, 1.0 / f)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def diffusive_phi(inv_phi, F, d_tx_masked, *, interpret=False):
+    """inv_phi [R, N] (s/GFLOP), F [R, N], d_tx_masked [R, N, N] (-inf
+    off-link) -> inv_phi' [R, N].  Pads N to a BN multiple internally;
+    padding columns are off-link so they never win the max."""
+    R, N = inv_phi.shape
+    Np = (N + BN - 1) // BN * BN
+    pad = Np - N
+    if pad:
+        inv_phi = jnp.pad(inv_phi, ((0, 0), (0, pad)), constant_values=1.0)
+        F = jnp.pad(F, ((0, 0), (0, pad)), constant_values=1.0)
+        d_tx_masked = jnp.pad(d_tx_masked, ((0, 0), (0, pad), (0, pad)),
+                              constant_values=NEG)
+    grid = (R, Np // BN, Np // BN)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, BN), lambda r, i, j: (r, j)),       # 1/φ (cols)
+            pl.BlockSpec((1, BN), lambda r, i, j: (r, i)),       # F   (rows)
+            pl.BlockSpec((1, BN, BN), lambda r, i, j: (r, i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, BN), lambda r, i, j: (r, i)),
+        out_shape=jax.ShapeDtypeStruct((R, Np), inv_phi.dtype),
+        scratch_shapes=[pltpu.VMEM((BN,), jnp.float32),
+                        pltpu.VMEM((BN,), jnp.float32)],
+        interpret=interpret,
+    )(inv_phi, F, d_tx_masked)
+    return out[:, :N]

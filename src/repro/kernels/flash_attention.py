@@ -1,0 +1,110 @@
+"""Pallas TPU flash attention (GQA, causal / sliding-window), forward.
+
+Canonical online-softmax formulation: grid (B, Hq, Sq/BQ, Sk/BK); the key
+dimension is the innermost (sequential) reduction axis, with running
+max / sum-exp / output accumulators in VMEM scratch.  GQA is handled in the
+index map (kv head = q head // group).  Q and KV tiles are (BQ, hd) and
+(BK, hd) with hd padded-free (heads dims are 64..256, MXU-aligned at 128
+where it matters for the contraction dims).
+
+Causal/window masking is positional (broadcasted iota); fully-masked tiles
+still stream (simple + correct; block-skip via the index map is a TPU
+latency optimization left to the grid construction below for causal: the
+key grid is truncated per q-block through the mask, not skipped — noted in
+DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale, causal, window, bq, bk):
+    kb = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)           # [BQ, hd]
+    k = k_ref[0, 0].astype(jnp.float32)           # [BK, hd]
+    v = v_ref[0, 0].astype(jnp.float32)           # [BK, hd]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    qpos = pl.program_id(2) * bq + jax.lax.broadcasted_iota(
+        jnp.int32, (bq, bk), 0)
+    kpos = kb * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    keep = jnp.ones((bq, bk), bool)
+    if causal:
+        keep &= qpos >= kpos
+    if window > 0:
+        keep &= (qpos - kpos) < window
+    s = jnp.where(keep, s, NEG)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_cur
+
+    @pl.when(kb == nk - 1)
+    def _finalize():
+        # rows with zero mass (fully masked) output 0
+        l = l_ref[...]
+        o_ref[0, 0] = (acc_ref[...] / jnp.where(l == 0.0, 1.0, l)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, bq=DEFAULT_BQ,
+                    bk=DEFAULT_BK, interpret=False):
+    """q [B,Sq,Hq,hd]; k/v [B,Sk,Hkv,hd] -> [B,Sq,Hq,hd]."""
+    B, Sq, Hq, hd = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    bq = min(bq, Sq)
+    bk = min(bk, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0, (Sq, bq, Sk, bk)
+    scale = 1.0 / math.sqrt(hd)
+
+    # layout: [B, H, S, hd] so the S tiles are contiguous per head
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+
+    grid = (B, Hq, Sq // bq, Sk // bk)
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal, window=window,
+                          bq=bq, bk=bk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sq, hd), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq,), jnp.float32),
+                        pltpu.VMEM((bq,), jnp.float32),
+                        pltpu.VMEM((bq, hd), jnp.float32)],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return jnp.swapaxes(out, 1, 2)

@@ -1,0 +1,133 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+These are the semantics ground truth: each kernel's test sweeps shapes and
+dtypes and asserts allclose against these.  They are also the CPU execution
+path (Pallas requires the TPU backend; the multi-pod dry-run lowers these).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+# ---------------------------------------------------------------------------
+# diffusive φ update (paper Eq. 10)
+# ---------------------------------------------------------------------------
+
+
+def diffusive_phi(inv_phi, F, d_tx_masked):
+    """inv_phi [.., N] (s/GFLOP), F [.., N], d_tx_masked [.., N, N] with
+    off-link entries = -inf-ish.  Returns inv_phi' [.., N]."""
+    cand = d_tx_masked + inv_phi[..., None, :]
+    worst = jnp.max(cand, axis=-1)
+    deg = jnp.sum(d_tx_masked > NEG / 2, axis=-1).astype(inv_phi.dtype)
+    inv_new = (1.0 / F + worst) / (deg + 1.0)
+    return jnp.where(deg > 0, inv_new, 1.0 / F)
+
+
+# ---------------------------------------------------------------------------
+# flash attention (GQA, causal/window), prefill/train
+# ---------------------------------------------------------------------------
+
+
+def flash_attention(q, k, v, *, causal=True, window=0):
+    """q [B,Sq,Hq,hd], k/v [B,Sk,Hkv,hd] -> [B,Sq,Hq,hd] (fp32 softmax)."""
+    B, Sq, Hq, hd = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, hd)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32)
+    s = s / math.sqrt(hd)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    keep = jnp.ones((Sq, Sk), bool)
+    if causal:
+        keep &= qpos >= kpos
+    if window and window > 0:
+        keep &= (qpos - kpos) < window
+    s = jnp.where(keep[None, None, None], s, NEG)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v)
+    return o.reshape(B, Sq, Hq, hd)
+
+
+# ---------------------------------------------------------------------------
+# decode attention (one query vs KV cache)
+# ---------------------------------------------------------------------------
+
+
+def decode_attention(q, k, v, pos, *, window=0):
+    """q [B,Hq,hd]; k/v [B,S,Hkv,hd]; pos scalar int (attend k_idx <= pos)."""
+    B, Hq, hd = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k).astype(jnp.float32)
+    s = s / math.sqrt(hd)
+    kpos = jnp.arange(S)
+    keep = kpos <= pos
+    if window and window > 0:
+        keep &= (pos - kpos) < window
+    s = jnp.where(keep[None, None, None, :], s, NEG)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v)
+    return o.reshape(B, Hq, hd)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU linear recurrence
+# ---------------------------------------------------------------------------
+
+
+def rglru_scan(a, b, h0=None):
+    """h_t = a_t h_{t-1} + b_t.  a, b [B,S,W] fp32.  Returns h [B,S,W]."""
+    if h0 is None:
+        h0 = jnp.zeros((a.shape[0], a.shape[2]), a.dtype)
+
+    def step(h, ab):
+        a_t, b_t = ab
+        h = a_t * h + b_t
+        return h, h
+
+    _, hs = jax.lax.scan(step, h0, (jnp.moveaxis(a, 1, 0),
+                                    jnp.moveaxis(b, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1)
+
+
+# ---------------------------------------------------------------------------
+# Mamba selective scan
+# ---------------------------------------------------------------------------
+
+
+def mamba_scan(a, b, C, h0=None):
+    """a,b [B,S,D,N]; C [B,S,N] -> y [B,S,D] = C_t·h_t, sequential oracle."""
+    B, S, D, N = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((B, D, N), a.dtype)
+
+    def step(h, xs):
+        a_t, b_t, c_t = xs
+        h = a_t * h + b_t
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    _, ys = jax.lax.scan(step, h0, (jnp.moveaxis(a, 1, 0),
+                                    jnp.moveaxis(b, 1, 0),
+                                    jnp.moveaxis(C, 1, 0)))
+    return jnp.moveaxis(ys, 0, 1)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)
+            ).astype(x.dtype)

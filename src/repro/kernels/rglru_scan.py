@@ -1,0 +1,65 @@
+"""Pallas TPU kernel for the RG-LRU linear recurrence h_t = a_t·h_{t-1}+b_t.
+
+The recurrence is per-channel, so the width dimension tiles freely
+(BW lanes); the sequence dimension is blocked (BS) with the running state
+carried in VMEM scratch across sequence tiles (grid dim 2 is sequential).
+Inside a tile the recurrence runs as an O(log BS) associative scan over
+fp32 registers — the classic work-inefficient-but-parallel form the VPU
+prefers over a serial loop.
+
+Grid: (B, W/BW, S/BS).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BW = 128
+DEFAULT_BS = 256
+
+
+def _kernel(a_ref, b_ref, h_ref, carry_ref):
+    sb = pl.program_id(2)
+
+    @pl.when(sb == 0)
+    def _init():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    a = a_ref[0].astype(jnp.float32)            # [BS, BW]
+    b = b_ref[0].astype(jnp.float32)
+    b = b.at[0].add(a[0] * carry_ref[...])
+
+    def comb(x, y):
+        ax, bx = x
+        ay, by = y
+        return ax * ay, ay * bx + by
+
+    _, h = jax.lax.associative_scan(comb, (a, b), axis=0)
+    h_ref[0] = h.astype(h_ref.dtype)
+    carry_ref[...] = h[-1]
+
+
+@functools.partial(jax.jit, static_argnames=("bw", "bs", "interpret"))
+def rglru_scan(a, b, *, bw=DEFAULT_BW, bs=DEFAULT_BS, interpret=False):
+    """a, b [B, S, W] -> h [B, S, W]  (h_0 = b_0; zero initial state)."""
+    B, S, W = a.shape
+    bw = min(bw, W)
+    bs = min(bs, S)
+    assert W % bw == 0 and S % bs == 0, (W, bw, S, bs)
+    grid = (B, W // bw, S // bs)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bs, bw), lambda bb, w, s: (bb, s, w)),
+            pl.BlockSpec((1, bs, bw), lambda bb, w, s: (bb, s, w)),
+        ],
+        out_specs=pl.BlockSpec((1, bs, bw), lambda bb, w, s: (bb, s, w)),
+        out_shape=jax.ShapeDtypeStruct((B, S, W), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bw,), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,44 @@
+"""Pallas TPU fused RMSNorm: one pass over row tiles, fp32 accumulation.
+
+Grid: (rows/BR,); block [BR, d] resident in VMEM (d ≤ 8192 ⇒ ≤ 4 MB fp32).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BR = 256
+
+
+def _kernel(x_ref, s_ref, o_ref, *, eps):
+    x = x_ref[...].astype(jnp.float32)
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(ms + eps)
+                  * s_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "br", "interpret"))
+def rmsnorm(x, scale, *, eps=1e-6, br=DEFAULT_BR, interpret=False):
+    """x [..., d]; scale [d] -> same shape/dtype as x."""
+    shape = x.shape
+    d = shape[-1]
+    rows = 1
+    for s in shape[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, d)
+    br_ = min(br, rows)
+    if rows % br_ != 0:
+        br_ = 1
+    out = pl.pallas_call(
+        functools.partial(_kernel, eps=eps),
+        grid=(rows // br_,),
+        in_specs=[pl.BlockSpec((br_, d), lambda i: (i, 0)),
+                  pl.BlockSpec((d,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((br_, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
+        interpret=interpret,
+    )(x2, scale)
+    return out.reshape(shape)

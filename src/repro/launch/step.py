@@ -1,0 +1,161 @@
+"""Train/serve step builders shared by the dry-run, train.py and serve.py."""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import build_model, input_partition_specs, input_structs
+from repro.models.registry import Model
+from repro.optim import OptConfig, OptState, apply_updates, init_opt, opt_specs
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: OptState
+
+
+def make_train_step(model: Model, opt_cfg: OptConfig):
+    def train_step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+        (loss, metrics), grads = jax.value_and_grad(
+            model.loss, has_aux=True)(state.params, batch)
+        params, opt, om = apply_updates(state.params, grads, state.opt,
+                                        opt_cfg)
+        return TrainState(params, opt), {**metrics, **om}
+
+    return train_step
+
+
+def init_train_state(model: Model, key) -> TrainState:
+    params = model.init(key)
+    return TrainState(params, init_opt(params))
+
+
+def train_state_specs(model: Model) -> TrainState:
+    ps = model.specs()
+    return TrainState(ps, opt_specs(ps))
+
+
+# ---------------------------------------------------------------------------
+# serve steps
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_step(model: Model):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+    return prefill_step
+
+
+def make_decode_step(model: Model):
+    def decode_step(params, caches, batch):
+        return model.decode_step(params, caches, batch)
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# dry-run cell assembly (ShapeDtypeStruct stand-ins, no allocation)
+# ---------------------------------------------------------------------------
+
+
+def _with_shardings(struct_tree, spec_tree, mesh):
+    from repro.launch.mesh import sanitize_spec
+    from jax.sharding import NamedSharding
+
+    def one(st, sp):
+        return jax.ShapeDtypeStruct(
+            st.shape, st.dtype,
+            sharding=NamedSharding(mesh, sanitize_spec(sp, st.shape, mesh)))
+
+    return jax.tree.map(one, struct_tree, spec_tree,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def cell_structs(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    """Returns (fn, example_structs_tuple, out_shardings) for the cell.
+
+    train  : train_step(state, batch)
+    prefill: prefill(params, batch)
+    decode : decode_step(params, caches, batch)
+    """
+    from repro.launch.mesh import batch_axes_of, shardings
+
+    model = build_model(cfg, mesh=mesh)
+    key = jax.random.PRNGKey(0)
+    param_structs = jax.eval_shape(model.init, key)
+    pspecs = model.specs()
+    batch_axes = ("data",)
+    if cfg.pure_dp:
+        # pure data parallelism (attention-free archs): batch spans both
+        # axes, weights FSDP over both, nothing tensor-parallel.
+        batch_axes = ("data", "model")
+
+        def to_dp(sp):
+            ent = []
+            seen_data = False
+            for e in sp:
+                if e == "data" and not seen_data:
+                    ent.append(("data", "model"))
+                    seen_data = True
+                elif e in ("data", "model"):
+                    ent.append(None)
+                else:
+                    ent.append(e)
+            return P(*ent)
+
+        pspecs = jax.tree.map(to_dp, pspecs,
+                              is_leaf=lambda x: isinstance(x, P))
+    if shape.kind != "train" and not cfg.serve_param_fsdp:
+        # inference weight layout: replicate across the batch axes (no
+        # optimizer state to hold, no per-step ZeRO-3 weight gathers)
+        def drop_data(sp):
+            ent = []
+            for e in sp:
+                if e == "data":
+                    ent.append(None)
+                elif isinstance(e, (tuple, list)):
+                    kept = tuple(x for x in e if x != "data")
+                    ent.append(kept if kept else None)
+                else:
+                    ent.append(e)
+            return P(*ent)
+        pspecs = jax.tree.map(drop_data, pspecs,
+                              is_leaf=lambda x: isinstance(x, P))
+    params_sh = _with_shardings(param_structs, pspecs, mesh)
+
+    binp = input_structs(cfg, shape)
+    bspec = input_partition_specs(cfg, shape, batch_axes=batch_axes)
+    batch_sh = _with_shardings(binp, bspec, mesh)
+
+    if shape.kind == "train":
+        opt_structs = jax.eval_shape(
+            lambda p: init_opt(p), param_structs)
+        ospecs = opt_specs(pspecs)
+        state_sh = TrainState(params_sh,
+                              _with_shardings(opt_structs, ospecs, mesh))
+        step = make_train_step(model, OptConfig())
+        out_sharding = (shardings(TrainState(pspecs, ospecs), mesh,
+                                  TrainState(param_structs, opt_structs)),
+                        None)
+        return step, (state_sh, batch_sh), out_sharding, model
+
+    if shape.kind == "prefill":
+        step = make_prefill_step(model)
+        cspecs = model.cache_specs()
+        _, cache_structs = jax.eval_shape(step, param_structs, binp)
+        out_sharding = (None, shardings(cspecs, mesh, cache_structs))
+        return step, (params_sh, batch_sh), out_sharding, model
+
+    # decode: one new token against a cache of seq_len
+    # (local-attention ring buffers and SSM states are bounded; the generic
+    # families allocate [L, B, S, Hkv, hd])
+    cache_structs = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len))
+    cspecs = model.cache_specs()
+    caches_sh = _with_shardings(cache_structs, cspecs, mesh)
+    step = make_decode_step(model)
+    out_sharding = (None, shardings(cspecs, mesh, cache_structs))
+    return step, (params_sh, caches_sh, batch_sh), out_sharding, model

@@ -1,0 +1,4 @@
+from repro.models.registry import (Model, build_model, input_partition_specs,
+                                   input_structs)
+
+__all__ = ["Model", "build_model", "input_structs", "input_partition_specs"]

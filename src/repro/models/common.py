@@ -1,0 +1,174 @@
+"""Shared building blocks: inits, norms, activations, rotary embeddings.
+
+Parameters are plain nested dicts of jnp arrays.  Every ``init_*`` has a
+matching ``specs_*`` returning a PyTree of ``jax.sharding.PartitionSpec``
+templates over logical axes ``'data'`` (batch/FSDP) and ``'model'`` (tensor).
+``repro.launch.mesh.resolve_specs`` maps the templates onto a concrete mesh
+(multi-pod meshes substitute ``('pod','data')`` for ``'data'``).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# dtype / init helpers
+# ---------------------------------------------------------------------------
+
+
+def dt(name: str):
+    return jnp.dtype(name)
+
+
+def dense_init(key, shape, in_axis_size, dtype) -> jax.Array:
+    """Truncated-normal fan-in init (LeCun-ish, matches common LM practice)."""
+    std = 1.0 / math.sqrt(max(in_axis_size, 1))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype) -> jax.Array:
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_norm(key, d, kind, dtype):
+    if kind == "layernorm":
+        return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def specs_norm(kind):
+    if kind == "layernorm":
+        return {"scale": P(None), "bias": P(None)}
+    return {"scale": P(None)}
+
+
+def apply_norm(params, x, kind="rmsnorm", eps=1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    else:
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * params["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rms_head_norm(scale, x, eps=1e-6):
+    """Per-head RMS norm over head_dim (qwen3 qk-norm); scale [head_dim]."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "swiglu": jax.nn.silu, "geglu": jax.nn.gelu}[name]
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (RoPE + M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def rope_angles(positions: jax.Array, head_dim: int, theta: float,
+                sections: Sequence[int] = ()) -> Tuple[jax.Array, jax.Array]:
+    """cos/sin tables.
+
+    positions: [B, S] (standard RoPE) or [R, B, S] with R == len(sections)
+      (M-RoPE: per-frequency-section position streams, qwen2-vl).
+    Returns cos, sin of shape [B, S, head_dim] (half-rotation layout).
+    """
+    half = head_dim // 2
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    if sections:
+        assert positions.ndim == 3 and positions.shape[0] == len(sections), (
+            "M-RoPE expects positions [R, B, S]")
+        # section id per frequency index: freq f takes its position stream
+        # from section sec_id[f] (qwen2-vl temporal/height/width split).
+        sec_id = jnp.concatenate([
+            jnp.full((n,), i, dtype=jnp.int32) for i, n in enumerate(sections)])
+        pos = positions.astype(jnp.float32)            # [R, B, S]
+        ang_all = pos[..., None] * inv_freq            # [R, B, S, half]
+        idx = jnp.broadcast_to(sec_id[None, None, None, :],
+                               (1,) + ang_all.shape[1:])
+        ang = jnp.squeeze(jnp.take_along_axis(ang_all, idx, axis=0), axis=0)
+    else:
+        pos = positions.astype(jnp.float32)            # [B, S]
+        ang = pos[..., None] * inv_freq                # [B, S, half]
+    cos = jnp.concatenate([jnp.cos(ang)] * 2, axis=-1)
+    sin = jnp.concatenate([jnp.sin(ang)] * 2, axis=-1)
+    return cos, sin
+
+
+def rotate_half(x):
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([-x2, x1], axis=-1)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: [B, S, H, hd]; cos/sin: [B, S, hd]."""
+    c = cos[:, :, None, :].astype(jnp.float32)
+    s = sin[:, :, None, :].astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    return (xf * c + rotate_half(xf) * s).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# scan-or-unroll over stacked layers
+# ---------------------------------------------------------------------------
+
+
+def unrolled_scan(body, carry, xs, length: Optional[int] = None):
+    """Drop-in for ``lax.scan`` that python-unrolls the loop.
+
+    The dry-run uses this (cfg.scan_layers=False) because XLA's HLO cost
+    analysis counts a while-loop body once instead of ×trip-count — unrolled
+    HLO gives exact FLOP/byte/collective accounting for §Roofline.
+    """
+    if length is None:
+        length = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(length):
+        xsl = None if xs is None else jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, xsl)
+        ys.append(y)
+    if not ys or all(l is None for l in jax.tree.leaves(
+            ys[0], is_leaf=lambda x: x is None)):
+        return carry, None
+    stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *ys)
+    return carry, stacked
+
+
+def scan_fn(cfg_scan_layers: bool):
+    return jax.lax.scan if cfg_scan_layers else unrolled_scan
+
+
+# ---------------------------------------------------------------------------
+# tree utilities
+# ---------------------------------------------------------------------------
+
+
+def slice_layers(tree, start: int, stop: int):
+    """Static slice of stacked-layer params (split-computing stage extraction)."""
+    return jax.tree.map(lambda a: a[start:stop], tree)
+
+
+def count_params(tree) -> int:
+    return int(sum(x.size for x in jax.tree.leaves(tree)))

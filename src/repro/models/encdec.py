@@ -1,0 +1,260 @@
+"""Whisper-style encoder-decoder (audio family; conv frontend stubbed).
+
+Encoder consumes pre-computed frame embeddings [B, F, d] (the conv1d+GELU
+frontend is a stub per the assignment), adds learned positions, runs
+bidirectional self-attention layers.  Decoder layers: causal self-attention
+(+KV cache), cross-attention over the encoder memory (cross K/V computed
+once at prefill), LayerNorm + GELU MLP, learned positions, no RoPE.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import mlp as mlp_mod
+from repro.models.common import (apply_norm, dt, embed_init, init_norm,
+                                 scan_fn, specs_norm)
+from repro.models.transformer import (batch_axes_of, lm_loss, remat_wrap,
+                                      shard_hint)
+
+# ---------------------------------------------------------------------------
+# init / specs
+# ---------------------------------------------------------------------------
+
+
+def _init_enc_layer(key, cfg, dtype):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {"ln1": init_norm(k1, cfg.d_model, cfg.norm, dtype),
+            "attn": attn.init_attention(k2, cfg, dtype),
+            "ln2": init_norm(k3, cfg.d_model, cfg.norm, dtype),
+            "mlp": mlp_mod.init_mlp(k4, cfg, dtype)}
+
+
+def _init_dec_layer(key, cfg, dtype):
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    return {"ln1": init_norm(k1, cfg.d_model, cfg.norm, dtype),
+            "self_attn": attn.init_attention(k2, cfg, dtype),
+            "ln_x": init_norm(k3, cfg.d_model, cfg.norm, dtype),
+            "cross_attn": attn.init_attention(k4, cfg, dtype),
+            "ln2": init_norm(k5, cfg.d_model, cfg.norm, dtype),
+            "mlp": mlp_mod.init_mlp(k6, cfg, dtype)}
+
+
+def init_encdec(key, cfg: ModelConfig):
+    dtype = dt(cfg.param_dtype)
+    e = cfg.encdec
+    ke, kp1, kp2, kenc, kdec, kn1, kn2 = jax.random.split(key, 7)
+    return {
+        "embed": embed_init(ke, (cfg.vocab_size, cfg.d_model), dtype),
+        "enc_pos": embed_init(kp1, (e.source_positions, cfg.d_model), dtype),
+        "dec_pos": embed_init(kp2, (e.max_target_positions, cfg.d_model),
+                              dtype),
+        "enc_layers": jax.vmap(lambda k: _init_enc_layer(k, cfg, dtype))(
+            jax.random.split(kenc, e.encoder_layers)),
+        "dec_layers": jax.vmap(lambda k: _init_dec_layer(k, cfg, dtype))(
+            jax.random.split(kdec, cfg.num_layers)),
+        "enc_norm": init_norm(kn1, cfg.d_model, cfg.norm, dtype),
+        "dec_norm": init_norm(kn2, cfg.d_model, cfg.norm, dtype),
+    }
+
+
+def specs_encdec(cfg: ModelConfig):
+    stack = lambda tree: jax.tree.map(
+        lambda sp: P(*((None,) + tuple(sp))), tree,
+        is_leaf=lambda x: isinstance(x, P))
+    enc_layer = {"ln1": specs_norm(cfg.norm),
+                 "attn": attn.specs_attention(cfg),
+                 "ln2": specs_norm(cfg.norm), "mlp": mlp_mod.specs_mlp(cfg)}
+    dec_layer = {"ln1": specs_norm(cfg.norm),
+                 "self_attn": attn.specs_attention(cfg),
+                 "ln_x": specs_norm(cfg.norm),
+                 "cross_attn": attn.specs_attention(cfg),
+                 "ln2": specs_norm(cfg.norm), "mlp": mlp_mod.specs_mlp(cfg)}
+    return {"embed": P("model", "data"),
+            "enc_pos": P(None, "data"), "dec_pos": P(None, "data"),
+            "enc_layers": stack(enc_layer), "dec_layers": stack(dec_layer),
+            "enc_norm": specs_norm(cfg.norm),
+            "dec_norm": specs_norm(cfg.norm)}
+
+
+# ---------------------------------------------------------------------------
+# encoder
+# ---------------------------------------------------------------------------
+
+
+def encode(params, cfg: ModelConfig, enc_embeds, *, mesh=None):
+    cd = dt(cfg.compute_dtype)
+    B, F, _ = enc_embeds.shape
+    h = enc_embeds.astype(cd) + params["enc_pos"][None, :F].astype(cd)
+    h = shard_hint(h, P(batch_axes_of(mesh), None, None), mesh)
+    pos = jnp.broadcast_to(jnp.arange(F, dtype=jnp.int32)[None], (B, F))
+
+    def body(carry, lp):
+        h = carry
+        a = apply_norm(lp["ln1"], h, cfg.norm)
+        q, k, v = attn.qkv_project(lp["attn"], cfg, a, pos, rope=False)
+        o = attn.chunked_attention(q, k, v, q_positions=pos, k_positions=pos,
+                                   causal=False, chunk=cfg.attn_chunk,
+                                   unroll=not cfg.scan_layers)
+        h = h + attn.out_project(lp["attn"], cfg, o)
+        m = apply_norm(lp["ln2"], h, cfg.norm)
+        return h + mlp_mod.apply_mlp(lp["mlp"], cfg, m), None
+
+    wrapped = remat_wrap(body, cfg.remat_policy)
+    h, _ = scan_fn(cfg.scan_layers)(wrapped, h, params["enc_layers"])
+    return apply_norm(params["enc_norm"], h, cfg.norm)
+
+
+# ---------------------------------------------------------------------------
+# decoder
+# ---------------------------------------------------------------------------
+
+
+def _dec_layer(lp, cfg, h, positions, *, mode, memory=None, cache=None,
+               pos_scalar=None):
+    """cache (decode): (ck, cv, xk, xv) — self KV + precomputed cross KV."""
+    B = h.shape[0]
+    a = apply_norm(lp["ln1"], h, cfg.norm)
+    q, k, v = attn.qkv_project(lp["self_attn"], cfg, a, positions, rope=False)
+    new_cache = None
+    if mode == "decode":
+        ck, cv, xk, xv = cache
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                          (0, pos_scalar, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                          (0, pos_scalar, 0, 0))
+        Skv = ck.shape[1]
+        k_positions = jnp.broadcast_to(
+            jnp.arange(Skv, dtype=jnp.int32)[None], (B, Skv))
+        q_position = jnp.full((B,), pos_scalar, jnp.int32)
+        o = attn.decode_attention_ref(q, ck, cv, q_position=q_position,
+                                      k_positions=k_positions)
+    else:
+        o = attn.chunked_attention(q, k, v, q_positions=positions,
+                                   k_positions=positions, causal=True,
+                                   chunk=cfg.attn_chunk,
+                                   unroll=not cfg.scan_layers)
+    h = h + attn.out_project(lp["self_attn"], cfg, o)
+
+    # cross-attention
+    x_in = apply_norm(lp["ln_x"], h, cfg.norm)
+    qx = attn.qkv_project(lp["cross_attn"], cfg, x_in, positions,
+                          rope=False)[0]
+    if mode == "decode":
+        kx, vx = xk, xv
+        new_cache = (ck, cv, xk, xv)
+    else:
+        mpos = jnp.broadcast_to(
+            jnp.arange(memory.shape[1], dtype=jnp.int32)[None],
+            (B, memory.shape[1]))
+        _, kx, vx = attn.qkv_project(lp["cross_attn"], cfg, memory, mpos,
+                                     rope=False)
+        if mode == "prefill":
+            new_cache = (k, v, kx, vx)
+    F = kx.shape[1]
+    fpos = jnp.broadcast_to(jnp.arange(F, dtype=jnp.int32)[None], (B, F))
+    if mode == "decode":
+        ox = attn.decode_attention_ref(
+            qx, kx, vx, q_position=jnp.full((B,), F - 1 + 10**9, jnp.int32),
+            k_positions=fpos)   # huge q_pos => attend all memory
+    else:
+        qpos = positions
+        ox = attn.chunked_attention(qx, kx, vx, q_positions=qpos,
+                                    k_positions=fpos, causal=False,
+                                    chunk=cfg.attn_chunk,
+                                    unroll=not cfg.scan_layers)
+    h = h + attn.out_project(lp["cross_attn"], cfg, ox)
+
+    m = apply_norm(lp["ln2"], h, cfg.norm)
+    h = h + mlp_mod.apply_mlp(lp["mlp"], cfg, m)
+    return h, new_cache
+
+
+def decode_tokens(params, cfg: ModelConfig, tokens, memory, *, mesh=None,
+                  mode="train"):
+    cd = dt(cfg.compute_dtype)
+    B, S = tokens.shape
+    h = (jnp.take(params["embed"], tokens, axis=0).astype(cd)
+         + params["dec_pos"][None, :S].astype(cd))
+    h = shard_hint(h, P(batch_axes_of(mesh), None, None), mesh)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    def body(carry, lp):
+        h = carry
+        h, nc = _dec_layer(lp, cfg, h, positions, mode=mode, memory=memory)
+        return h, nc
+
+    wrapped = remat_wrap(body, cfg.remat_policy) if mode == "train" else body
+    h, caches = scan_fn(cfg.scan_layers)(wrapped, h, params["dec_layers"])
+    h = apply_norm(params["dec_norm"], h, cfg.norm)
+    logits = jnp.einsum("bsd,vd->bsv", h, params["embed"].astype(h.dtype))
+    logits = shard_hint(logits, P(batch_axes_of(mesh), None, "model"), mesh)
+    return logits, (caches if mode == "prefill" else None)
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+
+
+def forward(params, cfg: ModelConfig, batch, *, mesh=None, mode="train"):
+    memory = encode(params, cfg, batch["enc_embeds"], mesh=mesh)
+    logits, caches = decode_tokens(params, cfg, batch["tokens"], memory,
+                                   mesh=mesh, mode=mode)
+    return logits, caches, {}
+
+
+def loss_fn(params, cfg: ModelConfig, batch, *, mesh=None):
+    logits, _, _ = forward(params, cfg, batch, mesh=mesh, mode="train")
+    loss = lm_loss(logits, batch["labels"], vocab=cfg.vocab_size)
+    return loss, {"loss": loss}
+
+
+def prefill(params, cfg: ModelConfig, batch, *, mesh=None):
+    """Builds decode caches. Self-KV is written into a full-capacity buffer
+    sized by the shape cell (batch['cache_len'] static via shape)."""
+    logits, caches, _ = forward(params, cfg, batch, mesh=mesh, mode="prefill")
+    return logits[:, -1], caches
+
+
+def decode_step(params, cfg: ModelConfig, caches, batch, *, mesh=None):
+    cd = dt(cfg.compute_dtype)
+    pos = batch["pos"]
+    tok = batch["token"]
+    B = tok.shape[0]
+    pe = jax.lax.dynamic_slice_in_dim(params["dec_pos"], pos, 1, axis=0)
+    h = jnp.take(params["embed"], tok, axis=0).astype(cd) + pe[None].astype(cd)
+    positions = jnp.broadcast_to(jnp.asarray(pos, jnp.int32)[None, None],
+                                 (B, 1))
+
+    def body(carry, xs):
+        h = carry
+        lp, cin = xs
+        h, nc = _dec_layer(lp, cfg, h, positions, mode="decode", cache=cin,
+                           pos_scalar=pos)
+        return h, nc
+
+    h, new_caches = scan_fn(cfg.scan_layers)(body, h,
+                                             (params["dec_layers"], caches))
+    h = apply_norm(params["dec_norm"], h, cfg.norm)
+    logits = jnp.einsum("bsd,vd->bsv", h, params["embed"].astype(h.dtype))
+    return logits[:, 0], new_caches
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    cd = dt(cfg.compute_dtype)
+    L, Hkv, hd = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim_
+    F = cfg.encdec.source_positions
+    return (jnp.zeros((L, batch, seq_len, Hkv, hd), cd),
+            jnp.zeros((L, batch, seq_len, Hkv, hd), cd),
+            jnp.zeros((L, batch, F, Hkv, hd), cd),
+            jnp.zeros((L, batch, F, Hkv, hd), cd))
+
+
+def cache_specs(cfg: ModelConfig):
+    sp = P(None, "data", "model", None, None)
+    xp = P(None, "data", None, "model", None)   # cross-KV: heads over model
+    return (sp, sp, xp, xp)

@@ -1,0 +1,312 @@
+"""RecurrentGemma-style hybrid LM: repeating (rec, rec, attn) superblocks.
+
+Every residual layer is  ln1 → mixer → +res → ln2 → MLP → +res  where the
+mixer alternates between an RG-LRU recurrent block and *local* (windowed)
+attention per ``cfg.hybrid.pattern``.  Layers are scanned per-superblock so
+the stacked-params trick still applies with a heterogeneous pattern; the
+remainder layers (38 = 12×3 + 2 for the 9b config) form a homogeneous tail.
+
+Local attention + bounded recurrent state is what makes `long_500k`
+tractable: the decode cache is O(window + lru_width), not O(S).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import mlp as mlp_mod
+from repro.models import rglru
+from repro.models.common import (apply_norm, dt, embed_init, init_norm,
+                                 scan_fn, specs_norm)
+from repro.models.transformer import (batch_axes_of, cast_weights,
+                                      head_loss, head_out, lm_loss,
+                                      remat_wrap, shard_hint)
+
+
+def _pattern(cfg: ModelConfig):
+    pat = cfg.hybrid.pattern
+    L = cfg.num_layers
+    n_super, tail = divmod(L, len(pat))
+    tail_types = pat[:tail]
+    assert len(set(tail_types)) <= 1, "tail layers must share a mixer type"
+    return pat, n_super, tail, (tail_types[0] if tail else None)
+
+
+# ---------------------------------------------------------------------------
+# init / specs
+# ---------------------------------------------------------------------------
+
+
+def _init_sublayer(key, cfg: ModelConfig, kind: str, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    mixer = (rglru.init_rec_block(k1, cfg, dtype) if kind == "rec"
+             else attn.init_attention(k1, cfg, dtype))
+    return {"ln1": init_norm(k2, cfg.d_model, cfg.norm, dtype),
+            "mixer": mixer,
+            "ln2": init_norm(k3, cfg.d_model, cfg.norm, dtype),
+            "mlp": mlp_mod.init_mlp(k2, cfg, dtype)}
+
+
+def _specs_sublayer(cfg: ModelConfig, kind: str):
+    mixer = (rglru.specs_rec_block(cfg) if kind == "rec"
+             else attn.specs_attention(cfg))
+    return {"ln1": specs_norm(cfg.norm), "mixer": mixer,
+            "ln2": specs_norm(cfg.norm), "mlp": mlp_mod.specs_mlp(cfg)}
+
+
+def init_hybrid(key, cfg: ModelConfig):
+    dtype = dt(cfg.param_dtype)
+    pat, n_super, tail, tail_kind = _pattern(cfg)
+    ke, kh, ksup, ktail = jax.random.split(key, 4)
+
+    def init_super(k):
+        ks = jax.random.split(k, len(pat))
+        return {f"s{i}_{kind}": _init_sublayer(ks[i], cfg, kind, dtype)
+                for i, kind in enumerate(pat)}
+
+    params = {
+        "embed": embed_init(ke, (cfg.vocab_size, cfg.d_model), dtype),
+        "super": jax.vmap(init_super)(jax.random.split(ksup, n_super)),
+        "final_norm": init_norm(kh, cfg.d_model, cfg.norm, dtype),
+    }
+    if tail:
+        params["tail"] = jax.vmap(
+            lambda k: _init_sublayer(k, cfg, tail_kind, dtype))(
+                jax.random.split(ktail, tail))
+    if not cfg.tie_embeddings:
+        params["lm_head"] = embed_init(kh, (cfg.d_model, cfg.vocab_size),
+                                       dtype)
+    return params
+
+
+def specs_hybrid(cfg: ModelConfig):
+    pat, n_super, tail, tail_kind = _pattern(cfg)
+    stack = lambda tree: jax.tree.map(
+        lambda sp: P(*((None,) + tuple(sp))), tree,
+        is_leaf=lambda x: isinstance(x, P))
+    s = {
+        "embed": P("model", "data"),
+        "super": stack({f"s{i}_{kind}": _specs_sublayer(cfg, kind)
+                        for i, kind in enumerate(pat)}),
+        "final_norm": specs_norm(cfg.norm),
+    }
+    if tail:
+        s["tail"] = stack(_specs_sublayer(cfg, tail_kind))
+    if not cfg.tie_embeddings:
+        s["lm_head"] = P("data", "model")
+    return s
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _apply_sublayer(lp, cfg: ModelConfig, kind, h, positions, *, mode,
+                    cache=None, pos_scalar=None):
+    """cache (decode): rec -> (conv_state, h_state); attn -> (ck, cv).
+    Returns (h, new_cache)."""
+    W = cfg.hybrid.window
+    x = apply_norm(lp["ln1"], h, cfg.norm)
+    new_cache = None
+    if kind == "rec":
+        if mode == "decode":
+            conv_s, h_s = cache
+            y, conv_s, h_s = rglru.apply_rec_block(
+                lp["mixer"], cfg, x, conv_state=conv_s, h_state=h_s,
+                return_state=True)
+            new_cache = (conv_s, h_s)
+        elif mode == "prefill":
+            y, conv_s, h_s = rglru.apply_rec_block(lp["mixer"], cfg, x,
+                                                   return_state=True)
+            new_cache = (conv_s, h_s)
+        else:
+            y = rglru.apply_rec_block(lp["mixer"], cfg, x)
+    else:
+        q, k, v = attn.qkv_project(lp["mixer"], cfg, x, positions)
+        B = h.shape[0]
+        if mode == "decode":
+            ck, cv = cache                         # ring buffers [B,W,Hkv,hd]
+            slot = jnp.mod(pos_scalar, W)
+            ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                              (0, slot, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                              (0, slot, 0, 0))
+            sl = jnp.arange(W, dtype=jnp.int32)
+            k_pos = pos_scalar - jnp.mod(pos_scalar - sl, W)   # may be < 0
+            k_positions = jnp.broadcast_to(k_pos[None, :], (B, W))
+            q_position = jnp.full((B,), pos_scalar, jnp.int32)
+            o = attn.decode_attention_ref(q, ck, cv, q_position=q_position,
+                                          k_positions=k_positions, window=W,
+                                          standard_layout=False)
+            new_cache = (ck, cv)
+        else:
+            qpos = positions
+            o = attn.chunked_attention(q, k, v, q_positions=qpos,
+                                       k_positions=qpos, causal=True,
+                                       window=W, chunk=cfg.attn_chunk,
+                                       unroll=not cfg.scan_layers)
+            if mode == "prefill":
+                S = k.shape[1]
+                Wc = min(W, S)
+                kl, vl = k[:, -Wc:], v[:, -Wc:]
+                pl = jnp.arange(S - Wc, S, dtype=jnp.int32)
+                slots = jnp.mod(pl, W)
+                ck = jnp.zeros((B, W) + k.shape[2:], k.dtype
+                               ).at[:, slots].set(kl)
+                cv = jnp.zeros((B, W) + v.shape[2:], v.dtype
+                               ).at[:, slots].set(vl)
+                new_cache = (ck, cv)
+        o = attn.out_project(lp["mixer"], cfg, o)
+        y = o
+    h = h + y
+    m = apply_norm(lp["ln2"], h, cfg.norm)
+    h = h + mlp_mod.apply_mlp(lp["mlp"], cfg, m)
+    return h, new_cache
+
+
+def _run_super(params, cfg: ModelConfig, h, positions, *, mode,
+               caches=None, pos_scalar=None, mesh=None):
+    pat, n_super, tail, tail_kind = _pattern(cfg)
+
+    def super_body(carry, xs):
+        h = carry
+        if mode == "decode":
+            lp, cin = xs
+        else:
+            lp, cin = xs, None
+        new_caches = {}
+        for i, kind in enumerate(pat):
+            name = f"s{i}_{kind}"
+            c_i = cin[name] if (mode == "decode") else None
+            h, nc = _apply_sublayer(lp[name], cfg, kind, h, positions,
+                                    mode=mode, cache=c_i,
+                                    pos_scalar=pos_scalar)
+            if mode in ("decode", "prefill"):
+                new_caches[name] = nc
+        if mode in ("decode", "prefill"):
+            return h, new_caches
+        return h, None
+
+    body = remat_wrap(super_body, cfg.remat_policy) if mode == "train" \
+        else super_body
+    scan = scan_fn(cfg.scan_layers)
+    if mode == "decode":
+        h, sc = scan(body, h, (params["super"], caches["super"]))
+    elif mode == "prefill":
+        h, sc = scan(body, h, params["super"])
+    else:
+        h, _ = scan(body, h, params["super"])
+        sc = None
+
+    tc = None
+    if tail:
+        def tail_body(carry, xs):
+            h = carry
+            if mode == "decode":
+                lp, cin = xs
+            else:
+                lp, cin = xs, None
+            h, nc = _apply_sublayer(lp, cfg, tail_kind, h, positions,
+                                    mode=mode, cache=cin,
+                                    pos_scalar=pos_scalar)
+            if mode in ("decode", "prefill"):
+                return h, nc
+            return h, None
+
+        tbody = remat_wrap(tail_body, cfg.remat_policy) if mode == "train" \
+            else tail_body
+        if mode == "decode":
+            h, tc = scan(tbody, h, (params["tail"], caches["tail"]))
+        elif mode == "prefill":
+            h, tc = scan(tbody, h, params["tail"])
+        else:
+            h, _ = scan(tbody, h, params["tail"])
+    return h, ({"super": sc, "tail": tc} if mode in ("decode", "prefill")
+               else None)
+
+
+def forward(params, cfg: ModelConfig, batch, *, mesh=None, mode="train"):
+    params = cast_weights(params, cfg)
+    cd = dt(cfg.compute_dtype)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    h = jnp.take(params["embed"], tokens, axis=0).astype(cd)
+    h = shard_hint(h, P(batch_axes_of(mesh), None, None), mesh)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    h, caches = _run_super(params, cfg, h, positions, mode=mode, mesh=mesh)
+    logits = head_out(params, cfg, h, mesh)
+    return logits, caches, {}
+
+
+def loss_fn(params, cfg: ModelConfig, batch, *, mesh=None):
+    params = cast_weights(params, cfg)
+    cd = dt(cfg.compute_dtype)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    h = jnp.take(params["embed"], tokens, axis=0).astype(cd)
+    h = shard_hint(h, P(batch_axes_of(mesh), None, None), mesh)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    h, _ = _run_super(params, cfg, h, positions, mode="train", mesh=mesh)
+    loss = head_loss(params, cfg, h, batch["labels"], mesh)
+    return loss, {"loss": loss}
+
+
+def prefill(params, cfg: ModelConfig, batch, *, mesh=None):
+    logits, caches, _ = forward(params, cfg, batch, mesh=mesh, mode="prefill")
+    return logits[:, -1], caches
+
+
+def decode_step(params, cfg: ModelConfig, caches, batch, *, mesh=None):
+    cd = dt(cfg.compute_dtype)
+    pos = batch["pos"]
+    tok = batch["token"]
+    B = tok.shape[0]
+    h = jnp.take(params["embed"], tok, axis=0).astype(cd)
+    positions = jnp.broadcast_to(jnp.asarray(pos, jnp.int32)[None, None],
+                                 (B, 1))
+    h, caches = _run_super(params, cfg, h, positions, mode="decode",
+                           caches=caches, pos_scalar=pos, mesh=mesh)
+    logits = head_out(params, cfg, h, mesh)
+    return logits[:, 0], caches
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    """Decode caches; attention caches are ring buffers of size window."""
+    pat, n_super, tail, tail_kind = _pattern(cfg)
+    cd = dt(cfg.compute_dtype)
+    w = cfg.hybrid.lru_width or cfg.d_model
+    W = cfg.hybrid.window
+    cw = cfg.hybrid.conv_width
+
+    def one(kind, n):
+        if kind == "rec":
+            return (jnp.zeros((n, batch, cw - 1, w), cd),
+                    jnp.zeros((n, batch, w), jnp.float32))
+        return (jnp.zeros((n, batch, W, cfg.num_kv_heads, cfg.head_dim_), cd),
+                jnp.zeros((n, batch, W, cfg.num_kv_heads, cfg.head_dim_), cd))
+
+    caches = {"super": {f"s{i}_{kind}": one(kind, n_super)
+                        for i, kind in enumerate(pat)}}
+    caches["tail"] = one(tail_kind, tail) if tail else None
+    return caches
+
+
+def cache_specs(cfg: ModelConfig):
+    pat, n_super, tail, tail_kind = _pattern(cfg)
+
+    def one(kind):
+        if kind == "rec":
+            return (P(None, "data", None, "model"),
+                    P(None, "data", "model"))
+        return (P(None, "data", "model", None, None),
+                P(None, "data", "model", None, None))
+
+    s = {"super": {f"s{i}_{kind}": one(kind) for i, kind in enumerate(pat)}}
+    s["tail"] = one(tail_kind) if tail else None
+    return s

@@ -1,0 +1,41 @@
+"""Dense FFN: SwiGLU / GeGLU / plain-GELU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.common import act_fn, dense_init
+
+
+def init_mlp(key, cfg: ModelConfig, dtype):
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.act in ("swiglu", "geglu"):
+        return {"w_gate": dense_init(ks[0], (d, ff), d, dtype),
+                "w_up": dense_init(ks[1], (d, ff), d, dtype),
+                "w_down": dense_init(ks[2], (ff, d), ff, dtype)}
+    return {"w_up": dense_init(ks[0], (d, ff), d, dtype),
+            "b_up": jnp.zeros((ff,), dtype),
+            "w_down": dense_init(ks[1], (ff, d), ff, dtype),
+            "b_down": jnp.zeros((d,), dtype)}
+
+
+def specs_mlp(cfg: ModelConfig):
+    if cfg.act in ("swiglu", "geglu"):
+        return {"w_gate": P("data", "model"), "w_up": P("data", "model"),
+                "w_down": P("model", "data")}
+    return {"w_up": P("data", "model"), "b_up": P("model"),
+            "w_down": P("model", "data"), "b_down": P(None)}
+
+
+def apply_mlp(p, cfg: ModelConfig, x):
+    cd = x.dtype
+    a = act_fn(cfg.act)
+    if cfg.act in ("swiglu", "geglu"):
+        g = a(x @ p["w_gate"].astype(cd))
+        u = x @ p["w_up"].astype(cd)
+        return (g * u) @ p["w_down"].astype(cd)
+    h = a(x @ p["w_up"].astype(cd) + p["b_up"].astype(cd))
+    return h @ p["w_down"].astype(cd) + p["b_down"].astype(cd)

@@ -1,0 +1,117 @@
+"""``build_model(cfg, mesh=None)`` — uniform Model API over all families.
+
+Model functions are pure (params explicit) so they jit/lower cleanly with
+``ShapeDtypeStruct`` stand-ins for the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec as encdec_mod
+from repro.models import hybrid as hybrid_mod
+from repro.models import ssm_lm as ssm_mod
+from repro.models import transformer as tf_mod
+from repro.models.common import dt
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable            # key -> params
+    specs: Callable           # () -> PyTree[PartitionSpec] templates
+    loss: Callable            # (params, batch) -> (loss, metrics)
+    forward: Callable         # (params, batch) -> (logits, caches, aux)
+    prefill: Callable         # (params, batch) -> (last_logits, caches)
+    decode_step: Callable     # (params, caches, batch) -> (logits, caches)
+    init_cache: Callable      # (batch, seq_len) -> caches
+    cache_specs: Callable     # () -> PyTree[PartitionSpec]
+
+
+def build_model(cfg: ModelConfig, mesh=None) -> Model:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        mod = tf_mod
+        init = partial(tf_mod.init_lm, cfg=cfg)
+        specs = partial(tf_mod.specs_lm, cfg)
+    elif fam == "hybrid":
+        mod = hybrid_mod
+        init = partial(hybrid_mod.init_hybrid, cfg=cfg)
+        specs = partial(hybrid_mod.specs_hybrid, cfg)
+    elif fam == "ssm":
+        mod = ssm_mod
+        init = partial(ssm_mod.init_ssm_lm, cfg=cfg)
+        specs = partial(ssm_mod.specs_ssm_lm, cfg)
+    elif fam == "encdec":
+        mod = encdec_mod
+        init = partial(encdec_mod.init_encdec, cfg=cfg)
+        specs = partial(encdec_mod.specs_encdec, cfg)
+    else:
+        raise ValueError(f"unknown family {fam}")
+
+    return Model(
+        cfg=cfg,
+        init=lambda key: init(key),
+        specs=specs,
+        loss=lambda params, batch: mod.loss_fn(params, cfg, batch, mesh=mesh),
+        forward=lambda params, batch, mode="train": mod.forward(
+            params, cfg, batch, mesh=mesh, mode=mode),
+        prefill=lambda params, batch: mod.prefill(params, cfg, batch,
+                                                  mesh=mesh),
+        decode_step=lambda params, caches, batch: mod.decode_step(
+            params, cfg, caches, batch, mesh=mesh),
+        init_cache=lambda batch, seq_len: mod.init_cache(cfg, batch, seq_len),
+        cache_specs=lambda: mod.cache_specs(cfg),
+    )
+
+
+# ---------------------------------------------------------------------------
+# input specs (dry-run stand-ins + partition templates)
+# ---------------------------------------------------------------------------
+
+
+def input_structs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStructs for every model input of this (arch, shape) cell."""
+    B, S = shape.global_batch, shape.seq_len
+    cd = dt(cfg.compute_dtype)
+    i32 = jnp.int32
+    sd = jax.ShapeDtypeStruct
+
+    if shape.kind == "decode":
+        batch = {"token": sd((B, 1), i32), "pos": sd((), i32)}
+        return batch
+
+    if cfg.family == "vlm":
+        batch = {"embeds": sd((B, S, cfg.d_model), cd),
+                 "positions": sd((len(cfg.mrope_sections), B, S), i32)}
+    elif cfg.family == "encdec":
+        F = cfg.encdec.source_positions
+        batch = {"enc_embeds": sd((B, F, cfg.d_model), cd),
+                 "tokens": sd((B, S), i32)}
+    else:
+        batch = {"tokens": sd((B, S), i32)}
+    if shape.kind == "train":
+        batch["labels"] = sd((B, S), i32)
+    return batch
+
+
+def input_partition_specs(cfg: ModelConfig, shape: ShapeConfig,
+                          batch_axes=("data",)) -> Dict[str, P]:
+    b = batch_axes
+    if shape.kind == "decode":
+        return {"token": P(b, None), "pos": P()}
+    if cfg.family == "vlm":
+        sp = {"embeds": P(b, None, None), "positions": P(None, b, None)}
+    elif cfg.family == "encdec":
+        sp = {"enc_embeds": P(b, None, None), "tokens": P(b, None)}
+    else:
+        sp = {"tokens": P(b, None)}
+    if shape.kind == "train":
+        sp["labels"] = P(b, None)
+    return sp

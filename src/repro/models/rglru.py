@@ -1,0 +1,152 @@
+"""Griffin/RecurrentGemma recurrent block: conv1d + RG-LRU + gated output.
+
+RG-LRU (arXiv:2402.19427 eq. 1-4):
+    r_t = sigmoid(W_a x_t)          (recurrence gate, block-diag W_a)
+    i_t = sigmoid(W_x x_t)          (input gate,      block-diag W_x)
+    a_t = a^(c * r_t),  a = sigmoid(Λ)    (elementwise)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training path uses an exact associative scan (first-order linear recurrence
+is associative under (a, b) ∘ (a', b') = (a·a', a'·b + b')); decode is the
+one-step update.  Gate matrices are block-diagonal with 16 blocks so the
+blocks align with the 16-way 'model' sharding of the width dimension.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init
+
+N_GATE_BLOCKS = 16
+C_SOFTPLUS = 8.0   # Λ init offset so a ≈ 0.9..0.999
+
+
+def init_rec_block(key, cfg: ModelConfig, dtype):
+    h = cfg.hybrid
+    d, w = cfg.d_model, (h.lru_width or cfg.d_model)
+    nb = min(N_GATE_BLOCKS, w)
+    bs = w // nb
+    ks = jax.random.split(key, 7)
+    # Λ init: a uniform in [0.9, 0.999] => Λ = logit(a^(1/c)) approx — use
+    # the Griffin recipe: -softplus-inverse spread.
+    u = jax.random.uniform(ks[0], (w,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(u ** (1.0 / h.c) / (1 - u ** (1.0 / h.c)))
+    return {
+        "w_in_x": dense_init(ks[1], (d, w), d, dtype),     # recurrence branch
+        "w_in_g": dense_init(ks[2], (d, w), d, dtype),     # gelu gate branch
+        "conv_w": dense_init(ks[3], (h.conv_width, w), h.conv_width, dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "gate_a": dense_init(ks[4], (nb, bs, bs), bs, dtype),
+        "gate_x": dense_init(ks[5], (nb, bs, bs), bs, dtype),
+        "lam": lam.astype(jnp.float32),
+        "w_out": dense_init(ks[6], (w, d), w, dtype),
+    }
+
+
+def specs_rec_block(cfg: ModelConfig):
+    return {
+        "w_in_x": P("data", "model"), "w_in_g": P("data", "model"),
+        "conv_w": P(None, "model"), "conv_b": P("model"),
+        "gate_a": P("model", None, None), "gate_x": P("model", None, None),
+        "lam": P("model"), "w_out": P("model", "data"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU recurrence
+# ---------------------------------------------------------------------------
+
+
+def _gates(p, x, cfg: ModelConfig):
+    """Block-diagonal gate projections. x [B,S,w] -> r, i [B,S,w]."""
+    w = x.shape[-1]
+    nb = p["gate_a"].shape[0]
+    bs = w // nb
+    xb = x.reshape(x.shape[:-1] + (nb, bs))
+    r = jnp.einsum("bsnd,nde->bsne", xb, p["gate_a"].astype(x.dtype))
+    i = jnp.einsum("bsnd,nde->bsne", xb, p["gate_x"].astype(x.dtype))
+    r = jax.nn.sigmoid(r.reshape(x.shape).astype(jnp.float32))
+    i = jax.nn.sigmoid(i.reshape(x.shape).astype(jnp.float32))
+    return r, i
+
+
+def rglru_coeffs(p, x, cfg: ModelConfig):
+    """a_t, b_t of the linear recurrence h_t = a_t h + b_t (fp32)."""
+    r, i = _gates(p, x, cfg)
+    log_a = -cfg.hybrid.c * jax.nn.softplus(p["lam"]) * r   # log a_t <= 0
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) computed stably via expm1: 1-a^2 = -expm1(2 log a)
+    norm = jnp.sqrt(-jnp.expm1(2.0 * log_a))
+    b = norm * (i * x.astype(jnp.float32))
+    return a, b
+
+
+def rglru_scan_ref(a, b, h0=None):
+    """Associative scan of h_t = a_t h_{t-1} + b_t over axis 1 (seq).
+
+    a, b: [B, S, w] fp32; h0 [B, w] initial state. Returns (h_seq, h_last).
+    """
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def comb(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = jax.lax.associative_scan(comb, (a, b), axis=1)
+    return hh, hh[:, -1]
+
+
+def rglru_step(a, b, h):
+    """One decode step: a, b [B, w]; h [B, w]."""
+    return a * h + b
+
+
+# ---------------------------------------------------------------------------
+# temporal conv (depthwise, causal, width cw)
+# ---------------------------------------------------------------------------
+
+
+def causal_conv1d(x, conv_w, conv_b, state=None):
+    """x [B,S,w]; conv_w [cw, w] depthwise causal conv.
+
+    state: [B, cw-1, w] trailing inputs from the previous segment (decode).
+    Returns (y [B,S,w], new_state [B, cw-1, w]).
+    """
+    cw = conv_w.shape[0]
+    B, S, w = x.shape
+    if state is None:
+        state = jnp.zeros((B, cw - 1, w), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)           # [B, S+cw-1, w]
+    y = sum(xp[:, i:i + S, :] * conv_w[i][None, None, :].astype(x.dtype)
+            for i in range(cw))
+    y = y + conv_b.astype(x.dtype)
+    new_state = xp[:, -(cw - 1):, :] if cw > 1 else state
+    return y, new_state
+
+
+def apply_rec_block(p, cfg: ModelConfig, x, *, conv_state=None, h_state=None,
+                    return_state=False):
+    """Full recurrent block. x [B,S,d] -> y [B,S,d] (+ states)."""
+    cd = x.dtype
+    xr = x @ p["w_in_x"].astype(cd)                    # recurrence branch
+    xg = jax.nn.gelu(x @ p["w_in_g"].astype(cd))       # gate branch
+    xr, new_conv = causal_conv1d(xr, p["conv_w"], p["conv_b"], conv_state)
+    a, b = rglru_coeffs(p, xr, cfg)
+    if x.shape[1] == 1 and h_state is not None:        # decode fast path
+        h_last = rglru_step(a[:, 0], b[:, 0], h_state)
+        h = h_last[:, None, :]
+    else:
+        h0 = h_state
+        h, h_last = rglru_scan_ref(a, b, h0)
+    y = (h.astype(cd) * xg) @ p["w_out"].astype(cd)
+    if return_state:
+        return y, new_conv, h_last
+    return y

@@ -1,0 +1,123 @@
+"""Falcon-Mamba LM: attention-free stack of Mamba-1 blocks.
+
+Layer = ln → mamba block → +res (mamba1 blocks embed their own expansion;
+no separate MLP).  Decode state is O(d_inner·(d_conv-1) + d_inner·N) per
+layer — no KV cache, which is why `long_500k` is tractable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import mamba as mamba_mod
+from repro.models.common import (apply_norm, dt, embed_init, init_norm,
+                                 scan_fn, specs_norm)
+from repro.models.transformer import (batch_axes_of, cast_weights,
+                                      head_loss, head_out, lm_loss,
+                                      remat_wrap, shard_hint)
+
+
+def init_ssm_lm(key, cfg: ModelConfig):
+    dtype = dt(cfg.param_dtype)
+    ke, kl, kh = jax.random.split(key, 3)
+
+    def init_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {"ln": init_norm(k1, cfg.d_model, cfg.norm, dtype),
+                "mamba": mamba_mod.init_mamba_block(k2, cfg, dtype)}
+
+    params = {
+        "embed": embed_init(ke, (cfg.vocab_size, cfg.d_model), dtype),
+        "layers": jax.vmap(init_layer)(jax.random.split(kl, cfg.num_layers)),
+        "final_norm": init_norm(kh, cfg.d_model, cfg.norm, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = embed_init(kh, (cfg.d_model, cfg.vocab_size),
+                                       dtype)
+    return params
+
+
+def specs_ssm_lm(cfg: ModelConfig):
+    layer = {"ln": specs_norm(cfg.norm),
+             "mamba": mamba_mod.specs_mamba_block(cfg)}
+    stacked = jax.tree.map(lambda sp: P(*((None,) + tuple(sp))), layer,
+                           is_leaf=lambda x: isinstance(x, P))
+    s = {"embed": P("model", "data"), "layers": stacked,
+         "final_norm": specs_norm(cfg.norm)}
+    if not cfg.tie_embeddings:
+        s["lm_head"] = P("data", "model")
+    return s
+
+
+def _run(params, cfg: ModelConfig, h, *, mode, caches=None, mesh=None):
+    def body(carry, xs):
+        h = carry
+        if mode == "decode":
+            lp, (conv_s, h_s) = xs
+        else:
+            lp, conv_s, h_s = xs, None, None
+        x = apply_norm(lp["ln"], h, cfg.norm)
+        if mode == "train":
+            y = mamba_mod.apply_mamba_block(lp["mamba"], cfg, x)
+            return h + y, None
+        y, conv_s, h_s = mamba_mod.apply_mamba_block(
+            lp["mamba"], cfg, x, conv_state=conv_s, h_state=h_s,
+            return_state=True)
+        return h + y, (conv_s, h_s)
+
+    wrapped = remat_wrap(body, cfg.remat_policy) if mode == "train" else body
+    scan = scan_fn(cfg.scan_layers)
+    if mode == "decode":
+        h, new_caches = scan(wrapped, h, (params["layers"], caches))
+        return h, new_caches
+    h, ys = scan(wrapped, h, params["layers"])
+    return h, (ys if mode == "prefill" else None)
+
+
+def forward(params, cfg: ModelConfig, batch, *, mesh=None, mode="train"):
+    params = cast_weights(params, cfg)
+    cd = dt(cfg.compute_dtype)
+    tokens = batch["tokens"]
+    h = jnp.take(params["embed"], tokens, axis=0).astype(cd)
+    h = shard_hint(h, P(batch_axes_of(mesh, cfg), None, None), mesh)
+    h, caches = _run(params, cfg, h, mode=mode, mesh=mesh)
+    logits = head_out(params, cfg, h, mesh)
+    return logits, caches, {}
+
+
+def loss_fn(params, cfg: ModelConfig, batch, *, mesh=None):
+    params = cast_weights(params, cfg)
+    cd = dt(cfg.compute_dtype)
+    h = jnp.take(params["embed"], batch["tokens"], axis=0).astype(cd)
+    h = shard_hint(h, P(batch_axes_of(mesh, cfg), None, None), mesh)
+    h, _ = _run(params, cfg, h, mode="train", mesh=mesh)
+    loss = head_loss(params, cfg, h, batch["labels"], mesh)
+    return loss, {"loss": loss}
+
+
+def prefill(params, cfg: ModelConfig, batch, *, mesh=None):
+    logits, caches, _ = forward(params, cfg, batch, mesh=mesh, mode="prefill")
+    return logits[:, -1], caches
+
+
+def decode_step(params, cfg: ModelConfig, caches, batch, *, mesh=None):
+    cd = dt(cfg.compute_dtype)
+    h = jnp.take(params["embed"], batch["token"], axis=0).astype(cd)
+    h, caches = _run(params, cfg, h, mode="decode", caches=caches, mesh=mesh)
+    logits = head_out(params, cfg, h, mesh)
+    return logits[:, 0], caches
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    L = cfg.num_layers
+    cd = dt(cfg.compute_dtype)
+    return (jnp.zeros((L, batch, s.d_conv - 1, d_in), cd),
+            jnp.zeros((L, batch, d_in, s.d_state), jnp.float32))
+
+
+def cache_specs(cfg: ModelConfig):
+    return (P(None, "data", None, "model"), P(None, "data", "model", None))

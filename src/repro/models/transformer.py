@@ -1,0 +1,366 @@
+"""Decoder-only transformer LM (dense / moe / vlm families).
+
+Layers are *stacked* ([L, ...] leaves) and executed with ``lax.scan`` +
+configurable remat — compact HLO (one layer body), bounded activation
+memory, and O(1) split-point extraction for the split-computing engine
+(a stage is a static slice of the stacked tree, see ``common.slice_layers``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import mlp as mlp_mod
+from repro.models import moe as moe_mod
+from repro.models.common import (apply_norm, dt, embed_init, init_norm,
+                                 scan_fn, slice_layers, specs_norm)
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+def remat_wrap(fn, policy: str):
+    if policy == "none":
+        return fn
+    pol = {"nothing": jax.checkpoint_policies.nothing_saveable,
+           "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+           }[policy]
+    return jax.checkpoint(fn, policy=pol)
+
+
+def shard_hint(x, spec, mesh):
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def batch_axes_of(mesh, cfg=None) -> Tuple[str, ...]:
+    axes = ("data", "model") if (cfg is not None and cfg.pure_dp) \
+        else ("data",)
+    if mesh is not None and "pod" in mesh.axis_names:
+        return ("pod",) + axes
+    return axes
+
+
+# ---------------------------------------------------------------------------
+# layer init / specs
+# ---------------------------------------------------------------------------
+
+
+def init_layer(key, cfg: ModelConfig, dtype):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {"ln1": init_norm(k1, cfg.d_model, cfg.norm, dtype),
+         "attn": attn.init_attention(k2, cfg, dtype),
+         "ln2": init_norm(k3, cfg.d_model, cfg.norm, dtype)}
+    if cfg.family == "moe":
+        p["moe"] = moe_mod.init_moe(k4, cfg, dtype)
+    else:
+        p["mlp"] = mlp_mod.init_mlp(k4, cfg, dtype)
+    return p
+
+
+def specs_layer(cfg: ModelConfig):
+    s = {"ln1": specs_norm(cfg.norm), "attn": attn.specs_attention(cfg),
+         "ln2": specs_norm(cfg.norm)}
+    if cfg.family == "moe":
+        s["moe"] = moe_mod.specs_moe(cfg)
+    else:
+        s["mlp"] = mlp_mod.specs_mlp(cfg)
+    # stacked over L: prepend None axis
+    return jax.tree.map(lambda sp: P(*((None,) + tuple(sp))), s,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def init_lm(key, cfg: ModelConfig):
+    dtype = dt(cfg.param_dtype)
+    ke, kl, kh = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.num_layers)
+    params = {
+        "embed": embed_init(ke, (cfg.vocab_size, cfg.d_model), dtype),
+        "layers": jax.vmap(lambda k: init_layer(k, cfg, dtype))(layer_keys),
+        "final_norm": init_norm(kh, cfg.d_model, cfg.norm, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = embed_init(kh, (cfg.d_model, cfg.vocab_size),
+                                       dtype)
+    return params
+
+
+def specs_lm(cfg: ModelConfig):
+    s = {"embed": P("model", "data"),
+         "layers": specs_layer(cfg),
+         "final_norm": specs_norm(cfg.norm)}
+    if not cfg.tie_embeddings:
+        s["lm_head"] = P("data", "model")
+    return s
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def embed_in(params, cfg: ModelConfig, batch, mesh=None):
+    """Token / precomputed-embedding input. Returns (h [B,S,d], positions)."""
+    cd = dt(cfg.compute_dtype)
+    if "embeds" in batch:                      # vlm/audio stub frontend
+        h = batch["embeds"].astype(cd)
+        B, S = h.shape[:2]
+    else:
+        h = jnp.take(params["embed"], batch["tokens"], axis=0).astype(cd)
+        B, S = batch["tokens"].shape
+    if "positions" in batch:
+        positions = batch["positions"]         # [B,S] or [R,B,S] (M-RoPE)
+    else:
+        pos = jnp.arange(S, dtype=jnp.int32)[None, :]
+        positions = jnp.broadcast_to(pos, (B, S))
+        if cfg.mrope_sections:
+            positions = jnp.broadcast_to(
+                positions[None], (len(cfg.mrope_sections), B, S))
+    h = shard_hint(h, P(batch_axes_of(mesh, cfg), None, None), mesh)
+    return h, positions
+
+
+def head_out(params, cfg: ModelConfig, h, mesh=None):
+    h = apply_norm(params["final_norm"], h, cfg.norm)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", h,
+                            params["embed"].astype(h.dtype))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", h,
+                            params["lm_head"].astype(h.dtype))
+    vocab_ax = None if cfg.pure_dp else "model"
+    return shard_hint(logits, P(batch_axes_of(mesh, cfg), None, vocab_ax),
+                      mesh)
+
+
+def _layer_apply(lp, cfg: ModelConfig, h, positions, *, mesh, mode,
+                 cache_kv=None, pos_scalar=None):
+    """One transformer layer. mode: train|prefill|decode.
+
+    Returns (h, new_cache_kv_or_None, aux).
+    """
+    a_in = apply_norm(lp["ln1"], h, cfg.norm)
+    q, k, v = attn.qkv_project(lp["attn"], cfg, a_in, positions)
+    # TP hint: q heads over 'model'.  For head counts that don't divide the
+    # axis (28/40/12-head qwens) this is an *uneven* internal sharding —
+    # legal for WSC (XLA pads), unlike jit-boundary shardings; the padding
+    # waste shows up honestly in the §Roofline useful-FLOP ratio.
+    q = shard_hint(q, P(batch_axes_of(mesh), None, "model", None), mesh)
+    B, S = h.shape[:2]
+    aux = {}
+    new_cache = None
+    if mode == "decode":
+        ck, cv = cache_kv                                  # [B,Skv,Hkv,hd]
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                          (0, pos_scalar, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                          (0, pos_scalar, 0, 0))
+        Skv = ck.shape[1]
+        k_positions = jnp.broadcast_to(
+            jnp.arange(Skv, dtype=jnp.int32)[None, :], (B, Skv))
+        q_position = jnp.full((B,), pos_scalar, jnp.int32)
+        o = attn.decode_attention_ref(q, ck, cv, q_position=q_position,
+                                      k_positions=k_positions)
+        new_cache = (ck, cv)
+    else:
+        qpos = positions if positions.ndim == 2 else positions[0]
+        o = attn.chunked_attention(
+            q, k, v, q_positions=qpos, k_positions=qpos, causal=True,
+            chunk=cfg.attn_chunk, unroll=not cfg.scan_layers)
+        if mode == "prefill":
+            new_cache = (k, v)
+    h = h + attn.out_project(lp["attn"], cfg, o)
+
+    m_in = apply_norm(lp["ln2"], h, cfg.norm)
+    if cfg.family == "moe":
+        y, aux = moe_mod.apply_moe(
+            lp["moe"], cfg, m_in, mesh=mesh,
+            batch_axes=batch_axes_of(mesh),
+            fsdp=(mode == "train") or cfg.serve_param_fsdp)
+    else:
+        y = mlp_mod.apply_mlp(lp["mlp"], cfg, m_in)
+    h = h + y
+    return h, new_cache, aux
+
+
+def run_layers(params_layers, cfg: ModelConfig, h, positions, *, mesh=None,
+               mode="train", caches=None, pos_scalar=None):
+    """Scan over stacked layers.
+
+    train:   returns (h, None, aux_mean)
+    prefill: returns (h, {'k': [L,B,S,Hkv,hd], 'v': ...}, aux_mean)
+    decode:  caches = {'k': [L,...], 'v': [L,...]}; returns (h, caches', aux)
+    """
+    def body(carry, xs):
+        h = carry
+        if mode == "decode":
+            lp, ck, cv = xs
+            h, new_cache, aux = _layer_apply(lp, cfg, h, positions, mesh=mesh,
+                                             mode=mode, cache_kv=(ck, cv),
+                                             pos_scalar=pos_scalar)
+            return h, (new_cache[0], new_cache[1])
+        lp = xs
+        h, new_cache, aux = _layer_apply(lp, cfg, h, positions, mesh=mesh,
+                                         mode=mode)
+        aux_t = (aux.get("moe_aux", jnp.zeros((), jnp.float32)),
+                 aux.get("moe_dropped", jnp.zeros((), jnp.float32)))
+        if mode == "prefill":
+            return h, (new_cache[0], new_cache[1], *aux_t)
+        return h, aux_t
+
+    scan = scan_fn(cfg.scan_layers)
+    if mode == "decode":
+        h, (ks, vs) = scan(body, h,
+                           (params_layers, caches["k"], caches["v"]))
+        return h, {"k": ks, "v": vs}, {}
+
+    wrapped = remat_wrap(body, cfg.remat_policy) if mode == "train" else body
+    h, ys = scan(wrapped, h, params_layers)
+    if mode == "prefill":
+        ks, vs, aux_l, drop_l = ys
+        return h, {"k": ks, "v": vs}, {"moe_aux": jnp.mean(aux_l),
+                                       "moe_dropped": jnp.mean(drop_l)}
+    aux_l, drop_l = ys
+    return h, None, {"moe_aux": jnp.mean(aux_l),
+                     "moe_dropped": jnp.mean(drop_l)}
+
+
+# ---------------------------------------------------------------------------
+# top-level model functions
+# ---------------------------------------------------------------------------
+
+
+def forward(params, cfg: ModelConfig, batch, *, mesh=None, mode="train"):
+    params = cast_weights(params, cfg)
+    h, positions = embed_in(params, cfg, batch, mesh)
+    h, caches, aux = run_layers(params["layers"], cfg, h, positions,
+                                mesh=mesh, mode=mode)
+    logits = head_out(params, cfg, h, mesh)
+    return logits, caches, aux
+
+
+def cast_weights(params, cfg: ModelConfig):
+    """Hillclimb lever: pre-convert big weight matrices to compute dtype so
+    ZeRO-3 all-gathers move bf16 (convert commutes below the gather).
+    Small/1-D leaves (norms, Λ, A_log, dt_bias) stay fp32."""
+    if not cfg.cast_weights_bf16:
+        return params
+    cd = dt(cfg.compute_dtype)
+
+    def one(x):
+        if (jnp.issubdtype(x.dtype, jnp.floating) and x.ndim >= 2
+                and x.size >= 1_000_000):
+            return x.astype(cd)
+        return x
+
+    return jax.tree.map(one, params)
+
+
+def head_loss(params, cfg: ModelConfig, h, labels, mesh=None):
+    """Final norm + lm head + CE, optionally sequence-chunked (loss_chunk)
+    so the [B, S, vocab] fp32 logits tensor never materializes."""
+    C = cfg.loss_chunk
+    B, S, _ = h.shape
+    if not C or S % C != 0 or S <= C:
+        logits = head_out(params, cfg, h, mesh)
+        return lm_loss(logits, labels, vocab=cfg.vocab_size)
+    nc = S // C
+    hc = jnp.moveaxis(h.reshape(B, nc, C, -1), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(B, nc, C), 1, 0)
+
+    def one(carry, xs):
+        h_i, l_i = xs
+        logits = head_out(params, cfg, h_i, mesh)
+        lf = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(lf, axis=-1)
+        gold = jnp.take_along_axis(
+            lf, jnp.clip(l_i, 0, cfg.vocab_size - 1)[..., None],
+            axis=-1)[..., 0]
+        mask = (l_i >= 0).astype(jnp.float32)
+        ce, cnt = carry
+        return (ce + jnp.sum((lse - gold) * mask), cnt + jnp.sum(mask)), None
+
+    if cfg.scan_layers:
+        (ce, cnt), _ = jax.lax.scan(one, (jnp.float32(0), jnp.float32(0)),
+                                    (hc, lc))
+    else:
+        from repro.models.common import unrolled_scan
+        (ce, cnt), _ = unrolled_scan(one, (jnp.float32(0), jnp.float32(0)),
+                                     (hc, lc))
+    return ce / jnp.maximum(cnt, 1.0)
+
+
+def lm_loss(logits, labels, *, vocab: int, z_coef: float = 0.0):
+    """Mean CE (fp32) with optional z-loss; labels < 0 are masked."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(
+        lf, jnp.clip(labels, 0, vocab - 1)[..., None], axis=-1)[..., 0]
+    ce = lse - gold
+    mask = (labels >= 0).astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum(ce * mask) / denom
+    if z_coef:
+        loss = loss + z_coef * jnp.sum(jnp.square(lse) * mask) / denom
+    return loss
+
+
+def loss_fn(params, cfg: ModelConfig, batch, *, mesh=None):
+    params = cast_weights(params, cfg)
+    h, positions = embed_in(params, cfg, batch, mesh)
+    h, _, aux = run_layers(params["layers"], cfg, h, positions, mesh=mesh,
+                           mode="train")
+    loss = head_loss(params, cfg, h, batch["labels"], mesh)
+    if cfg.family == "moe" and cfg.moe.router_aux_loss:
+        loss = loss + cfg.moe.router_aux_loss * aux["moe_aux"]
+    metrics = {"loss": loss, **aux}
+    return loss, metrics
+
+
+def prefill(params, cfg: ModelConfig, batch, *, mesh=None):
+    logits, caches, _ = forward(params, cfg, batch, mesh=mesh, mode="prefill")
+    # only the last-position logits are needed to start decoding
+    return logits[:, -1], caches
+
+
+def decode_step(params, cfg: ModelConfig, caches, batch, *, mesh=None):
+    """batch: {'token': [B,1]} or {'embeds': [B,1,d]}, 'pos': scalar int32."""
+    pos = batch["pos"]
+    cd = dt(cfg.compute_dtype)
+    if "embeds" in batch:
+        h = batch["embeds"].astype(cd)
+        B = h.shape[0]
+    else:
+        h = jnp.take(params["embed"], batch["token"], axis=0).astype(cd)
+        B = batch["token"].shape[0]
+    positions = jnp.broadcast_to(jnp.asarray(pos, jnp.int32)[None, None],
+                                 (B, 1))
+    if cfg.mrope_sections:
+        positions = jnp.broadcast_to(positions[None],
+                                     (len(cfg.mrope_sections), B, 1))
+    h, caches, _ = run_layers(params["layers"], cfg, h, positions, mesh=mesh,
+                              mode="decode", caches=caches, pos_scalar=pos)
+    logits = head_out(params, cfg, h, mesh)
+    return logits[:, 0], caches
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    hd, Hkv, L = cfg.head_dim_, cfg.num_kv_heads, cfg.num_layers
+    cd = dt(cfg.compute_dtype)
+    shape = (L, batch, seq_len, Hkv, hd)
+    return {"k": jnp.zeros(shape, cd), "v": jnp.zeros(shape, cd)}
+
+
+def cache_specs(cfg: ModelConfig):
+    # sequence dim sharded over 'model' => distributed flash-decode.
+    sp = P(None, "data", "model", None, None)
+    return {"k": sp, "v": sp}

@@ -1,0 +1,6 @@
+from repro.optim.adamw import (OptConfig, OptState, apply_updates,
+                               clip_by_global_norm, global_norm, init_opt,
+                               opt_specs, schedule)
+
+__all__ = ["OptConfig", "OptState", "init_opt", "opt_specs", "apply_updates",
+           "schedule", "global_norm", "clip_by_global_norm"]

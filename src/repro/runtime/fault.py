@@ -1,0 +1,106 @@
+"""Fault-tolerant training driver: checkpoint/restart, failure injection,
+straggler mitigation.
+
+The driver treats a train step as a unit of work that can die at any
+moment (preemption, hardware fault).  Recovery = restore latest checkpoint
++ stateless data pipeline indexed by step ⇒ bit-identical resume (tested).
+
+Straggler policy (the paper's congestion-aware early exit, lifted to the
+step level): each step has a deadline = `straggler_factor` × EMA(step
+time).  A step that exceeds it is counted and the policy reacts the way
+the paper's Eq. 16 reacts to queue growth — by shedding optional work
+(here: skipping the metrics host-sync, the analogue of a truncated exit)
+rather than stalling the fleet.  On a real fleet the same hook is where
+within-step timeout collectives / backup workers would attach.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+
+from repro.checkpoint import latest_step, restore, save
+
+
+@dataclasses.dataclass
+class DriverConfig:
+    ckpt_dir: str
+    ckpt_every: int = 50
+    keep: int = 3
+    max_steps: int = 200
+    straggler_factor: float = 3.0
+    # failure injection for tests: raise at this step, once
+    fail_at_step: Optional[int] = None
+
+
+class StepStats:
+    def __init__(self):
+        self.ema = None
+        self.stragglers = 0
+        self.steps = 0
+
+    def update(self, dt: float, factor: float) -> bool:
+        straggler = self.ema is not None and dt > factor * self.ema
+        self.ema = dt if self.ema is None else 0.9 * self.ema + 0.1 * dt
+        self.stragglers += int(straggler)
+        self.steps += 1
+        return straggler
+
+
+class FailureInjected(RuntimeError):
+    pass
+
+
+def run_training(cfg: DriverConfig, *, init_state: Callable[[], Any],
+                 train_step: Callable[[Any, int], Any],
+                 batch_fn: Callable[[int], Dict],
+                 on_metrics: Optional[Callable[[int, Dict], None]] = None,
+                 _failed_once: Dict = None) -> Any:
+    """Run (or resume) training to cfg.max_steps with checkpoint/restart.
+
+    `train_step(state, batch) -> (state, metrics)` must be jit'd by the
+    caller; `init_state()` builds step-0 state.  Returns final state.
+    """
+    _failed_once = _failed_once if _failed_once is not None else {}
+    start = latest_step(cfg.ckpt_dir)
+    if start is None:
+        state = init_state()
+        start = 0
+    else:
+        state, _ = restore(cfg.ckpt_dir, init_state())
+    stats = StepStats()
+
+    step = start
+    while step < cfg.max_steps:
+        if (cfg.fail_at_step is not None and step == cfg.fail_at_step
+                and not _failed_once.get("done")):
+            _failed_once["done"] = True
+            raise FailureInjected(f"injected failure at step {step}")
+        t0 = time.perf_counter()
+        batch = batch_fn(step)
+        state, metrics = train_step(state, batch)
+        straggler = stats.update(time.perf_counter() - t0,
+                                 cfg.straggler_factor)
+        step += 1
+        if on_metrics is not None and not straggler:
+            # straggler steps shed the host sync (early-exit analogue)
+            on_metrics(step, metrics)
+        if step % cfg.ckpt_every == 0 or step == cfg.max_steps:
+            save(cfg.ckpt_dir, step, state, keep=cfg.keep)
+    return state
+
+
+def run_with_restarts(cfg: DriverConfig, *, max_restarts: int = 3,
+                      **kw) -> Any:
+    """Supervisor loop: restart from the latest checkpoint on failure."""
+    failed = {}
+    for attempt in range(max_restarts + 1):
+        try:
+            return run_training(cfg, _failed_once=failed, **kw)
+        except FailureInjected:
+            if attempt == max_restarts:
+                raise
+            continue
+    raise RuntimeError("unreachable")

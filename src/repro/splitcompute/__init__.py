@@ -1,0 +1,10 @@
+from repro.splitcompute.partitioner import (StagePlan, plan_stages,
+                                            split_points)
+from repro.splitcompute.planner import (PipelineCost, layer_profile,
+                                        plan_and_refine, plan_cost,
+                                        refine_plan)
+from repro.splitcompute.serve_engine import ServeStats, SplitServeEngine
+
+__all__ = ["StagePlan", "plan_stages", "split_points", "SplitServeEngine",
+           "ServeStats", "PipelineCost", "plan_cost", "refine_plan",
+           "plan_and_refine", "layer_profile"]

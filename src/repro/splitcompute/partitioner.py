@@ -1,0 +1,93 @@
+"""φ-driven model partitioning — the paper's technique as a stage placer.
+
+The paper's "vertical split points" are layer boundaries where exactly one
+activation tensor crosses (Fig. 1 lower panel).  For the assigned LM
+architectures those boundaries are the residual stream between layers
+(MoE/attention internals are multi-tensor and therefore unsplittable,
+exactly like the paper's multi-branch blocks).
+
+``plan_stages`` assigns contiguous layer ranges to heterogeneous executors
+in proportion to their *aggregated computation capability* φ (Eq. 10) —
+i.e. the same diffusive metric that routes tasks in the swarm also places
+pipeline stages on a heterogeneous mesh, with link delay folded in via the
+d_tx term.  This is the TPU-native reading of "offload the remaining
+layers to the best neighbor" (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.diffusive import phi_fixpoint
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class StagePlan:
+    boundaries: Tuple[int, ...]   # len = n_stages+1; stage i = [b[i], b[i+1])
+    executors: Tuple[int, ...]    # executor id per stage
+    phi: Tuple[float, ...]        # aggregated capability per executor
+
+
+def split_points(cfg: ModelConfig) -> List[int]:
+    """Legal vertical split boundaries (layer indices 1..L-1).
+
+    hybrid: superblock granularity (recurrent state + window cache travel
+    with the activation, so we only cut between superblocks); others: every
+    layer boundary.
+    """
+    if cfg.family == "hybrid":
+        n = len(cfg.hybrid.pattern)
+        return list(range(n, cfg.num_layers - cfg.num_layers % n, n))
+    return list(range(1, cfg.num_layers))
+
+
+def plan_stages(cfg: ModelConfig, F: Sequence[float],
+                link_delay_s_per_gflop: Sequence[Sequence[float]] = None,
+                n_stages: int = None) -> StagePlan:
+    """Partition cfg.num_layers layers over executors proportionally to φ.
+
+    F: raw capability per executor (GFLOP/s-like units).  link_delay:
+    [n, n] matrix (s/GFLOP) for the φ diffusion; default = uniform small.
+    """
+    n = len(F)
+    n_stages = n_stages or n
+    F = jnp.asarray(F, jnp.float32)
+    if link_delay_s_per_gflop is None:
+        d_tx = jnp.full((n, n), 1e-4, jnp.float32)
+    else:
+        d_tx = jnp.asarray(link_delay_s_per_gflop, jnp.float32)
+    adj = ~jnp.eye(n, dtype=bool)   # fully-connected executor graph
+    phi, _ = phi_fixpoint(F, adj, d_tx, iters=16)
+    phi_np = np.asarray(phi)
+
+    # proportional allocation of layers to the n_stages strongest executors
+    order = np.argsort(-phi_np)[:n_stages]
+    weights = phi_np[order] / phi_np[order].sum()
+    L = cfg.num_layers
+    legal = set(split_points(cfg)) | {0, L}
+    raw = np.round(np.cumsum(weights) * L).astype(int)
+    raw[-1] = L
+    bounds = [0]
+    for b in raw:
+        # snap to the nearest legal split point >= previous bound
+        cand = min((p for p in legal if p >= bounds[-1]),
+                   key=lambda p: abs(p - int(b)), default=L)
+        cand = min((p for p in legal), key=lambda p: (abs(p - int(b))
+                                                      if p > bounds[-1]
+                                                      else 10**9))
+        bounds.append(max(cand, bounds[-1]))
+    bounds[-1] = L
+    # dedupe while preserving monotonicity
+    dedup = [0]
+    for b in bounds[1:]:
+        if b > dedup[-1]:
+            dedup.append(b)
+    if dedup[-1] != L:
+        dedup.append(L)
+    execs = tuple(int(order[i]) for i in range(len(dedup) - 1))
+    return StagePlan(tuple(dedup), execs, tuple(float(x) for x in phi_np))

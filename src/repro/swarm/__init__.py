@@ -1,0 +1,8 @@
+from repro.swarm.simulator import (DISTRIBUTED, GREEDY, LOCAL_ONLY, RANDOM,
+                                   RANDOM_ACYCLIC, STRATEGY_NAMES, run_many,
+                                   run_sim)
+from repro.swarm.tasks import TaskProfile, make_profile
+
+__all__ = ["run_sim", "run_many", "make_profile", "TaskProfile",
+           "LOCAL_ONLY", "RANDOM", "RANDOM_ACYCLIC", "GREEDY", "DISTRIBUTED",
+           "STRATEGY_NAMES"]

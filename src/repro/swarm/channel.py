@@ -1,0 +1,49 @@
+"""Communication model (paper §3.2): two-ray ground reflection pathloss →
+SNR (Eq. 4) → Shannon capacity (Eq. 3) → one-hop adjacency (Eq. 9)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SwarmConfig
+
+
+def pairwise_distance(pos: jax.Array) -> jax.Array:
+    """pos [N, 2] metres -> [N, N] distances (diag = 0)."""
+    d = pos[:, None, :] - pos[None, :, :]
+    return jnp.sqrt(jnp.sum(jnp.square(d), axis=-1) + 1e-9)
+
+
+def two_ray_pathloss_db(dist_m: jax.Array, h_tx: float, h_rx: float
+                        ) -> jax.Array:
+    """Two-ray ground-reflection model (Rappaport §4.6), far-field form:
+    PL(dB) = 40 log10(d) - 20 log10(h_t·h_r)."""
+    d = jnp.maximum(dist_m, 1.0)
+    return 40.0 * jnp.log10(d) - 20.0 * jnp.log10(h_tx * h_rx)
+
+
+def snr_db(dist_m: jax.Array, cfg: SwarmConfig) -> jax.Array:
+    """Eq. 4: SNR_ij = P_i - L(i,j) - N0   (all dB/dBm)."""
+    pl = two_ray_pathloss_db(dist_m, cfg.altitude_m, cfg.altitude_m)
+    return cfg.tx_power_dbm - pl - cfg.noise_dbm
+
+
+def capacity_bps(snr: jax.Array, cfg: SwarmConfig) -> jax.Array:
+    """Eq. 3: C = B log2(1 + 10^(SNR/10))."""
+    return cfg.bandwidth_hz * jnp.log2(1.0 + jnp.power(10.0, snr / 10.0))
+
+
+def link_state(pos: jax.Array, cfg: SwarmConfig):
+    """Returns (adj [N,N] bool, capacity [N,N] bit/s) at the given positions.
+
+    adj masks the diagonal and sub-threshold links (Eq. 9); capacity is
+    clamped to a tiny positive floor off-link so downstream divisions are
+    safe (those entries are never selected through adj).
+    """
+    dist = pairwise_distance(pos)
+    snr = snr_db(dist, cfg)
+    n = pos.shape[0]
+    eye = jnp.eye(n, dtype=bool)
+    adj = (snr >= cfg.snr_min_db) & ~eye
+    cap = jnp.where(adj, capacity_bps(snr, cfg), 1.0)
+    return adj, cap

@@ -1,0 +1,397 @@
+"""Vectorized time-stepped swarm simulator (paper §5 environment).
+
+One simulation = ``lax.scan`` over decision epochs (Δt = 200 ms); each epoch
+refreshes the channel/adjacency, runs the offloading strategy's decision
+rule once (Alg. 1), then an inner scan over fine ticks (default 10 ms)
+advances compute, transfers and Markov task arrivals.  The whole thing jits
+and ``vmap``s over Monte-Carlo runs (50 per the paper).
+
+Strategies (paper §5): 0 LocalOnly · 1 Random · 2 RandomAcyclic · 3 Greedy ·
+4 Distributed (ours, diffusive φ).  The strategy id is a *traced* scalar so
+all five share one executable.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SwarmConfig
+from repro.core.decision import transfer_decision
+from repro.core.diffusive import phi_update
+from repro.core.early_exit import (congestion_update, exit_accuracy,
+                                   exit_boundary_layers, exit_label)
+from repro.core.early_exit import CongestionState
+from repro.swarm.channel import link_state
+from repro.swarm.mobility import init_mobility, positions_at
+from repro.swarm.tasks import (TaskProfile, boundary_bits, make_profile,
+                               snap_to_boundary)
+
+INT_MAX = jnp.iinfo(jnp.int32).max
+BIG = 1e30
+
+LOCAL_ONLY, RANDOM, RANDOM_ACYCLIC, GREEDY, DISTRIBUTED = range(5)
+STRATEGY_NAMES = ("LocalOnly", "Random", "RandomAcyclic", "Greedy",
+                  "Distributed")
+
+
+# ---------------------------------------------------------------------------
+# state
+# ---------------------------------------------------------------------------
+
+
+def init_state(key, cfg: SwarmConfig, n: int) -> Dict:
+    Q = cfg.queue_slots
+    kf, km = jax.random.split(key)
+    F = jnp.maximum(
+        cfg.capability_mean
+        + cfg.capability_std * jax.random.normal(kf, (n,), jnp.float32),
+        50.0)
+    return {
+        "mob": init_mobility(km, cfg, n),
+        "F": F,
+        # queues (struct-of-arrays)
+        "q_active": jnp.zeros((n, Q), bool),
+        "q_cum": jnp.zeros((n, Q), jnp.float32),
+        "q_created": jnp.zeros((n, Q), jnp.float32),
+        "q_seq": jnp.zeros((n, Q), jnp.int32),
+        "q_visited": jnp.zeros((n, Q, n), bool),
+        "seq_counter": jnp.int32(0),
+        # single outgoing transfer per node (§3.2)
+        "tx_active": jnp.zeros((n,), bool),
+        "tx_dst": jnp.zeros((n,), jnp.int32),
+        "tx_bits": jnp.zeros((n,), jnp.float32),
+        "tx_cum": jnp.zeros((n,), jnp.float32),
+        "tx_created": jnp.zeros((n,), jnp.float32),
+        "tx_visited": jnp.zeros((n, n), bool),
+        "tx_start": jnp.zeros((n,), jnp.float32),
+        # protocol state
+        "phi": F,
+        "cong_prev": jnp.zeros((n,), jnp.float32),
+        "cong_D": jnp.zeros((n,), jnp.float32),
+        "xi_layers": jnp.full((n,), cfg.exit_points[2], jnp.int32),
+        "xi_label": jnp.zeros((n,), jnp.int32),
+        # Markov-modulated arrival chain (bursty workload, Fig. 1)
+        "burst_on": jnp.zeros((n,), bool),
+        # metric accumulators
+        "done_count": jnp.float32(0), "lat_sum": jnp.float32(0),
+        "acc_sum": jnp.float32(0), "proc_gflops": jnp.zeros((n,), jnp.float32),
+        "e_comp": jnp.float32(0), "e_tx": jnp.float32(0),
+        "tx_count": jnp.float32(0), "tx_time_sum": jnp.float32(0),
+        "drop_count": jnp.float32(0), "gen_count": jnp.float32(0),
+    }
+
+
+# ---------------------------------------------------------------------------
+# queue helpers
+# ---------------------------------------------------------------------------
+
+
+def head_slot(st):
+    seqv = jnp.where(st["q_active"], st["q_seq"], INT_MAX)
+    head = jnp.argmin(seqv, axis=1)
+    has = jnp.any(st["q_active"], axis=1)
+    return head, has
+
+
+def queued_gflops(st, profile: TaskProfile) -> jax.Array:
+    rem = jnp.maximum(profile.total_gflops - st["q_cum"], 0.0)
+    return jnp.sum(jnp.where(st["q_active"], rem, 0.0), axis=1)
+
+
+def push(st, mask, cum, created, visited):
+    """Insert one task per node where mask; drops (with count) if full."""
+    n, Q = st["q_active"].shape
+    free = jnp.argmin(st["q_active"], axis=1)              # first False slot
+    has_free = ~jnp.all(st["q_active"], axis=1)
+    ok = mask & has_free
+    rows = jnp.arange(n)
+    seq = st["seq_counter"] + jnp.cumsum(ok.astype(jnp.int32)) - 1
+    st = dict(st)
+    st["q_active"] = st["q_active"].at[rows, free].set(
+        jnp.where(ok, True, st["q_active"][rows, free]))
+    st["q_cum"] = st["q_cum"].at[rows, free].set(
+        jnp.where(ok, cum, st["q_cum"][rows, free]))
+    st["q_created"] = st["q_created"].at[rows, free].set(
+        jnp.where(ok, created, st["q_created"][rows, free]))
+    st["q_seq"] = st["q_seq"].at[rows, free].set(
+        jnp.where(ok, seq, st["q_seq"][rows, free]))
+    st["q_visited"] = st["q_visited"].at[rows, free].set(
+        jnp.where(ok[:, None], visited, st["q_visited"][rows, free]))
+    st["seq_counter"] = st["seq_counter"] + jnp.sum(ok.astype(jnp.int32))
+    st["drop_count"] = st["drop_count"] + jnp.sum(
+        (mask & ~has_free).astype(jnp.float32))
+    return st
+
+
+def pop_head(st, mask):
+    head, _ = head_slot(st)
+    rows = jnp.arange(st["q_active"].shape[0])
+    st = dict(st)
+    st["q_active"] = st["q_active"].at[rows, head].set(
+        jnp.where(mask, False, st["q_active"][rows, head]))
+    return st
+
+
+# ---------------------------------------------------------------------------
+# per-tick dynamics
+# ---------------------------------------------------------------------------
+
+
+def _compute_pass(st, budget, targets_cum, acc_levels, t_now, eJ):
+    """Advance each node's head task by up to `budget` GFLOPs."""
+    n, Q = st["q_active"].shape
+    rows = jnp.arange(n)
+    head, has = head_slot(st)
+    cur = st["q_cum"][rows, head]
+    rem = jnp.maximum(targets_cum - cur, 0.0)
+    adv = jnp.where(has, jnp.minimum(budget, rem), 0.0)
+    new_cum = cur + adv
+    completed = has & (new_cum >= targets_cum - 1e-6)
+    lat = t_now - st["q_created"][rows, head]
+    acc = exit_accuracy(st["xi_label"], acc_levels)
+
+    st = dict(st)
+    st["q_cum"] = st["q_cum"].at[rows, head].set(
+        jnp.where(has, new_cum, st["q_cum"][rows, head]))
+    st["proc_gflops"] = st["proc_gflops"] + adv
+    st["e_comp"] = st["e_comp"] + jnp.sum(adv) * eJ
+    st["done_count"] = st["done_count"] + jnp.sum(completed)
+    st["lat_sum"] = st["lat_sum"] + jnp.sum(jnp.where(completed, lat, 0.0))
+    st["acc_sum"] = st["acc_sum"] + jnp.sum(jnp.where(completed, acc, 0.0))
+    st["q_active"] = st["q_active"].at[rows, head].set(
+        jnp.where(completed, False, st["q_active"][rows, head]))
+    return st, budget - adv
+
+
+def _tick(st, key, cfg: SwarmConfig, profile: TaskProfile, cap, t_now):
+    n = st["F"].shape[0]
+    rows = jnp.arange(n)
+    tick = cfg.tick_s
+
+    # (a) Markov-modulated arrivals: ON/OFF burst chain per node; long-run
+    #     mean inter-arrival = task_period_s, burst rate = 1/(period·duty).
+    k_sw, k_ar = jax.random.split(key)
+    duty = cfg.burst_on_s / (cfg.burst_on_s + cfg.burst_off_s)
+    p_on_off = 1.0 - jnp.exp(-tick / cfg.burst_on_s)
+    p_off_on = 1.0 - jnp.exp(-tick / cfg.burst_off_s)
+    flip = jax.random.uniform(k_sw, (n,))
+    on = st["burst_on"]
+    st = dict(st)
+    st["burst_on"] = jnp.where(on, flip >= p_on_off, flip < p_off_on)
+    p_arr = 1.0 - jnp.exp(-tick / (cfg.task_period_s * duty))
+    arrive = jax.random.bernoulli(k_ar, p_arr, (n,)) & st["burst_on"]
+    st = push(st, arrive, jnp.zeros((n,)), jnp.full((n,), t_now),
+              jnp.zeros((n, n), bool))
+    st["gen_count"] = st["gen_count"] + jnp.sum(arrive.astype(jnp.float32))
+
+    # (b) compute (budget cascade x2: finish a task and start the next)
+    targets = profile.cum_gflops[jnp.clip(st["xi_layers"], 0,
+                                          profile.gflops.shape[0])]
+    budget = st["F"] * tick
+    for _ in range(2):
+        st, budget = _compute_pass(st, budget, targets,
+                                   cfg.exit_accuracy, t_now,
+                                   cfg.energy_per_gflop_j)
+
+    # (c) transfer progress + delivery (one delivery per receiver per tick)
+    rate = cap[rows, st["tx_dst"]]                         # bit/s (epoch-frozen)
+    active = st["tx_active"]
+    st["tx_bits"] = jnp.where(active, st["tx_bits"] - rate * tick,
+                              st["tx_bits"])
+    st["e_tx"] = st["e_tx"] + jnp.sum(active) * (
+        10.0 ** (cfg.tx_power_dbm / 10.0) * 1e-3) * tick
+    arrived = active & (st["tx_bits"] <= 0.0)
+    # receiver contention: lowest-index origin wins per destination
+    origin_rank = jnp.where(arrived, rows, INT_MAX)
+    winner = jnp.full((n,), INT_MAX).at[st["tx_dst"]].min(
+        jnp.where(arrived, origin_rank, INT_MAX))
+    deliver = arrived & (winner[st["tx_dst"]] == rows)
+
+    dst_mask = jnp.zeros((n,), bool).at[st["tx_dst"]].max(deliver)
+    # scatter in-flight fields to destination rows
+    inv = jnp.full((n,), 0, jnp.int32).at[st["tx_dst"]].max(
+        jnp.where(deliver, rows, 0))                        # origin per dst
+    cum_d = st["tx_cum"][inv]
+    created_d = st["tx_created"][inv]
+    visited_d = st["tx_visited"][inv] | jax.nn.one_hot(
+        inv, n, dtype=bool)                                 # mark origin
+    st = push(st, dst_mask, cum_d, created_d, visited_d)
+    st["tx_active"] = st["tx_active"] & ~deliver
+    st["tx_time_sum"] = st["tx_time_sum"] + jnp.sum(
+        jnp.where(deliver, t_now - st["tx_start"], 0.0))
+    return st
+
+
+# ---------------------------------------------------------------------------
+# epoch decision (strategy dispatch)
+# ---------------------------------------------------------------------------
+
+
+def _strategy_decision(st, strategy, adj, d_tx, T, key, cfg: SwarmConfig):
+    """Returns (do_transfer [N] bool, target [N] i32, phi')."""
+    n = st["F"].shape[0]
+    k1, k2, k3 = jax.random.split(key, 3)
+    head, has = head_slot(st)
+    rows = jnp.arange(n)
+    has_nbr = jnp.any(adj, axis=1)
+
+    # ---- Distributed (ours): Eqs. 10-13 ----------------------------------
+    phi = phi_update(st["phi"], st["F"], adj, d_tx)
+    dec = transfer_decision(T, phi, adj, cfg.gamma)
+    dist = (dec.transfer, dec.target)
+
+    # ---- Greedy: least instantaneous load, w.p. p_greedy -----------------
+    cand = jnp.where(adj, T[None, :], BIG)
+    g_tgt = jnp.argmin(cand, axis=1)
+    g_less = jnp.min(cand, axis=1) < T
+    g_do = (jax.random.bernoulli(k1, cfg.greedy_offload_p, (n,))
+            & has_nbr & g_less)
+    greedy = (g_do, g_tgt)
+
+    # ---- Random: uniform neighbor, w.p. 0.2 ------------------------------
+    gum = jax.random.gumbel(k2, (n, n))
+    r_tgt = jnp.argmax(jnp.where(adj, gum, -BIG), axis=1)
+    r_do = jax.random.bernoulli(k2, cfg.random_offload_p, (n,)) & has_nbr
+    random_ = (r_do, r_tgt)
+
+    # ---- RandomAcyclic: uniform unvisited neighbor, w.p. 0.1 -------------
+    visited_head = st["q_visited"][rows, head]              # [N, N]
+    amask = adj & ~visited_head
+    a_has = jnp.any(amask, axis=1)
+    a_tgt = jnp.argmax(jnp.where(amask, jax.random.gumbel(k3, (n, n)), -BIG),
+                       axis=1)
+    a_do = jax.random.bernoulli(k3, cfg.random_acyclic_p, (n,)) & a_has
+    acyc = (a_do, a_tgt)
+
+    local = (jnp.zeros((n,), bool), jnp.zeros((n,), jnp.int32))
+
+    do = jax.lax.switch(strategy, [
+        lambda: local[0], lambda: random_[0], lambda: acyc[0],
+        lambda: greedy[0], lambda: dist[0]])
+    tgt = jax.lax.switch(strategy, [
+        lambda: local[1], lambda: random_[1], lambda: acyc[1],
+        lambda: greedy[1], lambda: dist[1]])
+    return do, tgt, phi
+
+
+def _epoch(st, key, epoch_idx, strategy, cfg: SwarmConfig,
+           profile: TaskProfile):
+    n = st["F"].shape[0]
+    rows = jnp.arange(n)
+    t0 = epoch_idx.astype(jnp.float32) * cfg.decision_period_s
+    kd, kt = jax.random.split(key)
+
+    # 1. refresh channel at epoch start
+    pos = positions_at(st["mob"], cfg, t0)
+    adj, cap = link_state(pos, cfg)
+    d_tx = jnp.where(adj, profile.bits_per_gflop / cap, BIG)
+
+    # 2. strategy decision (Alg. 1 lines 2-5)
+    T = queued_gflops(st, profile)
+    do, tgt, phi = _strategy_decision(st, strategy, adj, d_tx, T, kd, cfg)
+    st = dict(st)
+    st["phi"] = phi
+
+    # 3. congestion-aware early exit (Alg. 1 lines 10-11, Eqs. 14-16)
+    cong = congestion_update(
+        CongestionState(st["cong_prev"], st["cong_D"]), T,
+        cfg.decision_period_s, cfg.ema_alpha)
+    st["cong_prev"], st["cong_D"] = cong.prev_T, cong.D
+    if cfg.early_exit_enabled:
+        lbl = exit_label(cong.D, *cfg.exit_thresholds)
+    else:
+        lbl = jnp.zeros((n,), jnp.int32)
+    st["xi_label"] = lbl
+    st["xi_layers"] = exit_boundary_layers(lbl, cfg.exit_points,
+                                           cfg.exit_finalize_layers)
+
+    # 4. initiate transfers: pop head, snap to boundary (§3.1 discard)
+    head, has = head_slot(st)
+    elig = do & has & ~st["tx_active"] & (tgt >= 0)
+    cum_h = st["q_cum"][rows, head]
+    cum_snap = snap_to_boundary(profile, cum_h)
+    bits = boundary_bits(profile, cum_h)
+    st["tx_dst"] = jnp.where(elig, tgt, st["tx_dst"])
+    st["tx_bits"] = jnp.where(elig, bits, st["tx_bits"])
+    st["tx_cum"] = jnp.where(elig, cum_snap, st["tx_cum"])
+    st["tx_created"] = jnp.where(elig, st["q_created"][rows, head],
+                                 st["tx_created"])
+    st["tx_visited"] = jnp.where(elig[:, None],
+                                 st["q_visited"][rows, head],
+                                 st["tx_visited"])
+    st["tx_start"] = jnp.where(elig, t0, st["tx_start"])
+    st["tx_count"] = st["tx_count"] + jnp.sum(elig.astype(jnp.float32))
+    st["tx_active"] = st["tx_active"] | elig
+    st = pop_head(st, elig)
+
+    # 5. fine ticks
+    n_ticks = int(round(cfg.decision_period_s / cfg.tick_s))
+
+    def tick_body(st, i):
+        t_now = t0 + (i.astype(jnp.float32) + 1.0) * cfg.tick_s
+        st = _tick(st, jax.random.fold_in(kt, i), cfg, profile, cap, t_now)
+        return st, None
+
+    st, _ = jax.lax.scan(tick_body, st, jnp.arange(n_ticks))
+    return st
+
+
+# ---------------------------------------------------------------------------
+# run + metrics
+# ---------------------------------------------------------------------------
+
+
+def run_sim(key, cfg: SwarmConfig, strategy, n: int | None = None) -> Dict:
+    """One full simulation; returns the metric dict (see summarize)."""
+    n = n or cfg.num_workers
+    profile = make_profile(cfg)
+    k_init, k_run = jax.random.split(key)
+    st = init_state(k_init, cfg, n)
+    n_epochs = int(round(cfg.sim_time_s / cfg.decision_period_s))
+
+    def body(st, i):
+        st = _epoch(st, jax.random.fold_in(k_run, i), i, strategy, cfg,
+                    profile)
+        return st, None
+
+    st, _ = jax.lax.scan(body, st, jnp.arange(n_epochs))
+    return summarize(st, cfg, profile)
+
+
+def summarize(st, cfg: SwarmConfig, profile: TaskProfile) -> Dict:
+    done = jnp.maximum(st["done_count"], 1.0)
+    rem_q = queued_gflops(st, profile)
+    rem_tx = jnp.where(st["tx_active"],
+                       profile.total_gflops - st["tx_cum"], 0.0)
+    # Jain fairness over capability-normalized processed GFLOPs (Fig. 4d)
+    x = st["proc_gflops"] / st["F"]
+    jain = (jnp.sum(x) ** 2) / (x.shape[0] * jnp.sum(x * x) + 1e-12)
+    tps = st["done_count"] / cfg.sim_time_s
+    acc = st["acc_sum"] / done
+    ae = (st["e_comp"] + st["e_tx"]) / done
+    al = st["lat_sum"] / done
+    fom = tps * acc / jnp.maximum(ae * al, 1e-12)
+    return {
+        "completed": st["done_count"], "generated": st["gen_count"],
+        "avg_latency_s": al, "avg_accuracy": acc,
+        "remaining_gflops": jnp.sum(rem_q) + jnp.sum(rem_tx),
+        "avg_transfer_time_s": st["tx_time_sum"]
+        / jnp.maximum(st["tx_count"], 1.0),
+        "transfers": st["tx_count"],
+        "jain_fairness": jain,
+        "energy_per_task_j": ae,
+        "energy_total_j": st["e_comp"] + st["e_tx"],
+        "throughput_tps": tps,
+        "dropped": st["drop_count"],
+        "fom": fom,
+    }
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "n", "num_runs"))
+def run_many(key, cfg: SwarmConfig, strategy, n: int, num_runs: int) -> Dict:
+    """vmap over Monte-Carlo runs; returns dict of [num_runs] arrays."""
+    keys = jax.random.split(key, num_runs)
+    return jax.vmap(lambda k: run_sim(k, cfg, strategy, n))(keys)

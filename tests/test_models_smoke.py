@@ -1,0 +1,110 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, assert output shapes + finiteness (deliverable f)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, reduced
+from repro.models import build_model
+from repro.models.common import count_params
+
+ARCH_IDS = sorted(ARCHS)
+
+
+def make_batch(cfg, B=2, S=16, key=0):
+    k = jax.random.PRNGKey(key)
+    if cfg.family == "vlm":
+        batch = {
+            "embeds": jax.random.normal(k, (B, S, cfg.d_model), jnp.float32),
+            "positions": jnp.broadcast_to(
+                jnp.arange(S, dtype=jnp.int32)[None, None],
+                (len(cfg.mrope_sections), B, S)),
+        }
+    elif cfg.family == "encdec":
+        F = cfg.encdec.source_positions
+        batch = {
+            "enc_embeds": jax.random.normal(k, (B, F, cfg.d_model),
+                                            jnp.float32),
+            "tokens": jax.random.randint(k, (B, S), 0, cfg.vocab_size),
+        }
+    else:
+        batch = {"tokens": jax.random.randint(k, (B, S), 0, cfg.vocab_size)}
+    batch["labels"] = jax.random.randint(k, (B, S), 0, cfg.vocab_size)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_finite(arch):
+    cfg = reduced(get_config(arch))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    assert count_params(params) > 0
+    batch = make_batch(cfg)
+    logits, _, _ = model.forward(params, batch)
+    assert logits.shape == (2, 16, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_decreases_loss(arch):
+    cfg = reduced(get_config(arch))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg)
+
+    @jax.jit
+    def step(p):
+        (loss, metrics), grads = jax.value_and_grad(model.loss,
+                                                    has_aux=True)(p, batch)
+        p2 = jax.tree.map(lambda w, g: w - 0.05 * g.astype(w.dtype)
+                          if jnp.issubdtype(w.dtype, jnp.floating) else w,
+                          p, grads)
+        return p2, loss
+
+    p, l0 = step(params)
+    for _ in range(3):
+        p, l1 = step(p)
+    assert np.isfinite(float(l0)) and np.isfinite(float(l1))
+    assert float(l1) < float(l0), f"loss did not decrease: {l0} -> {l1}"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_then_decode_matches_forward(arch):
+    """Decode path consistency: prefill S-1 tokens then decode the S-th;
+    logits must match the full-sequence forward at that position."""
+    cfg = reduced(get_config(arch))
+    if cfg.family == "vlm":
+        pytest.skip("vlm decode consumes tokens after an embeds prompt; "
+                    "covered by test_decode_cache_vlm")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 2, 8
+    batch = make_batch(cfg, B=B, S=S)
+
+    logits_full, _, _ = model.forward(params, batch, mode="train")
+
+    prompt = {k: (v[:, :S - 1] if k in ("tokens",) else v)
+              for k, v in batch.items() if k != "labels"}
+    caches = model.init_cache(B, S)
+    if cfg.family in ("dense", "moe", "encdec"):
+        # write prompt KV into the allocated cache: replay via decode steps
+        pass
+    logits = None
+    # replay all tokens through decode_step (tests cache correctness)
+    tok_seq = batch["tokens"]
+    if cfg.family == "encdec":
+        # encdec decode needs cross-KV: build caches via prefill of full len
+        last, caches = model.prefill(params, {**prompt,
+                                              "tokens": tok_seq[:, :S - 1]})
+        np.testing.assert_allclose(
+            np.asarray(last, np.float32),
+            np.asarray(logits_full[:, S - 2], np.float32), rtol=2e-2,
+            atol=2e-2)
+        return
+    for t in range(S):
+        step_batch = {"token": tok_seq[:, t:t + 1], "pos": jnp.int32(t)}
+        logits, caches = model.decode_step(params, caches, step_batch)
+    np.testing.assert_allclose(np.asarray(logits, np.float32),
+                               np.asarray(logits_full[:, -1], np.float32),
+                               rtol=2e-2, atol=2e-2)

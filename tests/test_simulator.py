@@ -1,0 +1,120 @@
+"""Swarm simulator invariants + paper-claim checks (integration level)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SwarmConfig
+from repro.swarm import (DISTRIBUTED, GREEDY, LOCAL_ONLY, RANDOM,
+                         RANDOM_ACYCLIC, make_profile, run_many)
+
+CFG = dataclasses.replace(SwarmConfig(), sim_time_s=20.0, num_workers=15)
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def results():
+    out = {}
+    for s in (LOCAL_ONLY, RANDOM, RANDOM_ACYCLIC, GREEDY, DISTRIBUTED):
+        out[s] = run_many(KEY, CFG, jnp.int32(s), 15, 6)
+    return out
+
+
+def test_task_conservation(results):
+    """generated = completed + remaining-in-system + dropped (approximately:
+    remaining is measured in GFLOPs, so convert via the task profile)."""
+    profile = make_profile(CFG)
+    for s, m in results.items():
+        gen = np.asarray(m["generated"])
+        done = np.asarray(m["completed"])
+        drop = np.asarray(m["dropped"])
+        rem_tasks = np.asarray(m["remaining_gflops"]) / profile.total_gflops
+        # remaining GFLOPs undercounts partially-done tasks ⇒ inequality both
+        # ways with a 1-task-per-node slack
+        assert np.all(done + drop <= gen + 1e-3)
+        assert np.all(gen - done - drop <= rem_tasks + CFG.num_workers + 1)
+
+
+def test_local_only_never_transfers(results):
+    assert float(np.max(np.asarray(results[LOCAL_ONLY]["transfers"]))) == 0.0
+
+
+def test_energy_positive_and_accounted(results):
+    for s, m in results.items():
+        assert np.all(np.asarray(m["energy_total_j"]) > 0)
+        if s == LOCAL_ONLY:
+            # no transfers => no tx energy => lowest energy per processed task
+            pass
+    e_local = np.asarray(results[LOCAL_ONLY]["energy_per_task_j"]).mean()
+    e_dist = np.asarray(results[DISTRIBUTED]["energy_per_task_j"]).mean()
+    assert e_local <= e_dist + 1e-6   # paper Fig. 4e: LocalOnly cheapest
+
+
+def test_fairness_in_unit_interval(results):
+    for m in results.values():
+        j = np.asarray(m["jain_fairness"])
+        assert np.all((j > 0) & (j <= 1.0 + 1e-6))
+
+
+def test_distributed_beats_local_under_load(results):
+    """Paper Fig. 4: the diffusive method completes more work with lower
+    latency than LocalOnly in the bursty default regime."""
+    lat_d = float(np.asarray(results[DISTRIBUTED]["avg_latency_s"]).mean())
+    lat_l = float(np.asarray(results[LOCAL_ONLY]["avg_latency_s"]).mean())
+    rem_d = float(np.asarray(results[DISTRIBUTED]["remaining_gflops"]).mean())
+    rem_l = float(np.asarray(results[LOCAL_ONLY]["remaining_gflops"]).mean())
+    assert lat_d < lat_l
+    assert rem_d < rem_l
+
+
+def test_distributed_transfers_bounded(results):
+    """One outgoing transfer per node at a time: transfers per node per
+    decision epoch <= 1."""
+    n_epochs = CFG.sim_time_s / CFG.decision_period_s
+    tx = np.asarray(results[DISTRIBUTED]["transfers"])
+    assert np.all(tx <= CFG.num_workers * n_epochs)
+
+
+def test_early_exit_reduces_latency_and_accuracy():
+    cfg_ee = dataclasses.replace(CFG, early_exit_enabled=True)
+    m_off = run_many(KEY, CFG, jnp.int32(DISTRIBUTED), 15, 6)
+    m_on = run_many(KEY, cfg_ee, jnp.int32(DISTRIBUTED), 15, 6)
+    assert (np.asarray(m_on["avg_latency_s"]).mean()
+            < np.asarray(m_off["avg_latency_s"]).mean())
+    assert (np.asarray(m_on["avg_accuracy"]).mean()
+            <= np.asarray(m_off["avg_accuracy"]).mean() + 1e-6)
+    # with early exit off, completed tasks carry full accuracy
+    np.testing.assert_allclose(np.asarray(m_off["avg_accuracy"]), 0.95,
+                               atol=1e-3)
+
+
+def test_channel_monotonicity():
+    from repro.swarm.channel import capacity_bps, snr_db, two_ray_pathloss_db
+    d = jnp.asarray([100.0, 1_000.0, 5_000.0, 20_000.0])
+    pl = two_ray_pathloss_db(d, 100.0, 100.0)
+    assert bool(jnp.all(jnp.diff(pl) > 0))          # loss grows with distance
+    s = snr_db(d[None], SwarmConfig())
+    assert bool(jnp.all(jnp.diff(s[0]) < 0))        # SNR falls
+    c = capacity_bps(s, SwarmConfig())
+    assert bool(jnp.all(jnp.diff(c[0]) < 0))        # capacity falls
+
+
+def test_mobility_stays_on_circle():
+    from repro.swarm.mobility import init_mobility, positions_at
+    cfg = SwarmConfig()
+    mob = init_mobility(jax.random.PRNGKey(3), cfg, 10)
+    p0 = positions_at(mob, cfg, 0.0)
+    p1 = positions_at(mob, cfg, 12.345)
+    r0 = jnp.linalg.norm(p0 - mob["center"], axis=-1)
+    r1 = jnp.linalg.norm(p1 - mob["center"], axis=-1)
+    np.testing.assert_allclose(np.asarray(r0), cfg.movement_radius_m,
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(r1), cfg.movement_radius_m,
+                               rtol=1e-5)
+    # speed check: arc length over dt
+    dt = 0.1
+    p2 = positions_at(mob, cfg, 12.345 + dt)
+    v = jnp.linalg.norm(p2 - p1, axis=-1) / dt
+    np.testing.assert_allclose(np.asarray(v), cfg.speed_mps, rtol=1e-3)

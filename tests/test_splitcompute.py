@@ -1,0 +1,77 @@
+"""Split-compute engine: stage composition must equal the full model, the
+φ-planner must respect legal split points, and the serve engine must
+early-exit under congestion."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import build_model
+from repro.models.common import slice_layers
+from repro.models.transformer import embed_in, head_out, run_layers
+from repro.splitcompute import (SplitServeEngine, plan_stages, split_points)
+
+
+def test_stage_composition_equals_full_forward():
+    """Running layers [0,k) then [k,L) must reproduce the full forward —
+    the correctness property behind every vertical split (paper Fig. 1)."""
+    cfg = reduced(get_config("qwen3-1.7b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                              cfg.vocab_size)
+    batch = {"tokens": toks}
+
+    logits_full, _, _ = model.forward(params, batch)
+
+    h, positions = embed_in(params, cfg, batch)
+    L = cfg.num_layers
+    for (a, b) in [(0, 1), (1, L)]:
+        sp = slice_layers(params["layers"], a, b)
+        h, _, _ = run_layers(sp, cfg, h, positions, mode="train")
+    logits_stages = head_out(params, cfg, h)
+    np.testing.assert_allclose(np.asarray(logits_stages, np.float32),
+                               np.asarray(logits_full, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_split_points_respect_family_granularity():
+    dense = get_config("qwen3-4b")
+    assert split_points(dense) == list(range(1, dense.num_layers))
+    hyb = get_config("recurrentgemma-9b")
+    pts = split_points(hyb)
+    assert all(p % len(hyb.hybrid.pattern) == 0 for p in pts)
+    assert max(pts) < hyb.num_layers
+
+
+def test_plan_stages_proportional_to_phi():
+    cfg = get_config("qwen3-1.7b")
+    F = [100.0, 100.0, 800.0, 100.0]
+    plan = plan_stages(cfg, F)
+    assert plan.boundaries[0] == 0 and plan.boundaries[-1] == cfg.num_layers
+    assert all(b2 > b1 for b1, b2 in zip(plan.boundaries, plan.boundaries[1:]))
+    # strongest executor gets the first (and largest) stage
+    sizes = np.diff(plan.boundaries)
+    assert plan.executors[0] == 2
+    assert sizes[0] == sizes.max()
+
+
+def test_serve_engine_early_exits_under_burst():
+    cfg = reduced(get_config("qwen3-1.7b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    plan = plan_stages(cfg, [400.0, 420.0])
+    eng = SplitServeEngine(cfg, params, plan, tau_med=0.5, tau_high=1.5)
+    key = jax.random.PRNGKey(2)
+    # burst: submit many requests with no service steps in between
+    for r in range(12):
+        key, k = jax.random.split(key)
+        toks = jax.random.randint(k, (2, 16), 0, cfg.vocab_size)
+        eng.submit({"tokens": toks}, 0.0)
+        if r < 2:
+            eng.step()
+    stats = eng.drain()
+    assert stats.completed == 12 * 2
+    assert stats.exit_counts[1] + stats.exit_counts[2] > 0, \
+        "congestion-aware early exit never fired under burst"

@@ -41,6 +41,12 @@ def main() -> None:
     fig7_earlyexit.run(workers=(10, 30) if FAST else (10, 20, 30, 40, 50),
                        **kw)
 
+    print("\n== Scenario sweep (ours): mobility x channel x churn ==")
+    from benchmarks import fig_scenarios
+    fig_scenarios.run(scenarios=fig_scenarios.SCENARIOS[:3] if FAST
+                      else fig_scenarios.SCENARIOS,
+                      sim_time=10.0 if FAST else 20.0, **kw)
+
     print("\n== Ablation (ours): arrival burstiness ==")
     from benchmarks import ablation_burst
     ablation_burst.run(duties=(0.25, 1.0) if FAST else (0.125, 0.25, 0.5,

@@ -1,0 +1,15 @@
+"""Repo-level pytest config.
+
+``hypothesis`` is an optional dependency: when it is not installed, a
+minimal fixed-seed stand-in from ``tests/_shims`` is put on ``sys.path`` so
+the property tests still collect and run (as seeded example sweeps rather
+than adaptive search).  The real package always wins when present.
+"""
+import os
+import sys
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "tests",
+                                    "_shims"))

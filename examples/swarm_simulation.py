@@ -1,7 +1,11 @@
 """Run the paper's UAV-swarm simulation head-to-head: all five offloading
 strategies at 30 workers, with and without congestion-aware early exit.
 
-    PYTHONPATH=src python examples/swarm_simulation.py [--runs 8]
+Scenario selection is pure config — e.g. random-waypoint mobility over a
+log-normal-shadowed channel with node churn:
+
+    PYTHONPATH=src python examples/swarm_simulation.py [--runs 8] \
+        --mobility random_waypoint --channel log_normal --fault markov
 """
 import argparse
 import dataclasses
@@ -28,13 +32,23 @@ def main():
     ap.add_argument("--runs", type=int, default=8)
     ap.add_argument("--workers", type=int, default=30)
     ap.add_argument("--sim-time", type=float, default=50.0)
+    from repro.swarm import CHANNEL_MODELS, FAULT_MODELS, MOBILITY_MODELS
+    ap.add_argument("--mobility", default="circular",
+                    choices=sorted(MOBILITY_MODELS))
+    ap.add_argument("--channel", default="two_ray",
+                    choices=sorted(CHANNEL_MODELS))
+    ap.add_argument("--fault", default="none", choices=sorted(FAULT_MODELS))
     args = ap.parse_args()
 
     key = jax.random.PRNGKey(0)
     cfg = dataclasses.replace(SwarmConfig(), num_workers=args.workers,
-                              sim_time_s=args.sim_time)
+                              sim_time_s=args.sim_time,
+                              mobility_model=args.mobility,
+                              channel_model=args.channel,
+                              fault_model=args.fault)
     print(f"{args.workers} UAVs, {args.sim_time:.0f}s, {args.runs} runs, "
-          "bursty Markov arrivals (60 ms mean)")
+          "bursty Markov arrivals (60 ms mean), scenario="
+          f"{args.mobility}/{args.channel}/fault:{args.fault}")
 
     print("\nno early exit (paper Fig. 4 regime):")
     for s, name in enumerate(STRATEGY_NAMES):

@@ -1,0 +1,16 @@
+"""Version-compat shims for jax API drift."""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=False):
+    """``jax.shard_map`` appeared as a top-level API (with the ``check_rep``
+    flag renamed ``check_vma``) after 0.4.x; older releases only have
+    ``jax.experimental.shard_map.shard_map``."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)

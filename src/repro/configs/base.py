@@ -311,6 +311,26 @@ class SwarmConfig:
     altitude_m: float = 100.0                # two-ray antenna heights
     num_runs: int = 50
     early_exit_enabled: bool = False
+    # --- scenario engine (DESIGN.md §3.4): string-keyed model selection ---
+    # Every field below is static under jit, so sweeping scenarios is a pure
+    # config change — no code edits, one executable per (cfg, n) pair.
+    mobility_model: str = "circular"         # circular|random_waypoint|gauss_markov
+    channel_model: str = "two_ray"           # two_ray|free_space|log_normal
+    fault_model: str = "none"                # none|markov
+    # random-waypoint / Gauss-Markov mobility parameters
+    speed_min_mps: float = 25.0
+    speed_max_mps: float = 100.0
+    gm_alpha: float = 0.85                   # Gauss-Markov velocity memory
+    gm_sigma_mps: float = 20.0               # Gauss-Markov velocity noise
+    # free-space / log-normal channel parameters
+    carrier_hz: float = 2.4e9
+    # log-distance exponent (1 m reference); at the 20 km mission scale,
+    # 2.0 keeps a sparse multi-hop topology — exponents > 2.2 disconnect it
+    pathloss_exp: float = 2.0
+    shadowing_sigma_db: float = 6.0          # log-normal shadowing std
+    # node fault/churn (markov): mean dwell times of the up/down chain
+    fault_mean_up_s: float = 30.0
+    fault_mean_down_s: float = 5.0
     # task profile (illustrative detection CNN, DESIGN.md §3)
     task_layers: int = 60
     task_gflops_total: float = 12.0

@@ -48,6 +48,29 @@ def phi_update(phi: jax.Array, F: jax.Array, adj: jax.Array,
     return jnp.where(deg > 0, phi_new, F)
 
 
+def phi_update_op(phi: jax.Array, F: jax.Array, adj: jax.Array,
+                  d_tx: jax.Array) -> jax.Array:
+    """Backend-dispatched ``phi_update`` (the simulator hot path).
+
+    Routes the [N, N] masked max-plus reduction through
+    ``kernels.ops.diffusive_phi`` — the tiled Pallas kernel on TPU (or in
+    interpret mode under ``REPRO_FORCE_INTERPRET=1``), the jnp reference
+    elsewhere.  Accepts [N] or batched [R, N] operands; the isolated-node
+    fallback (φ_i = F_i exactly) is applied here so results match
+    ``phi_update`` to float32 rounding.
+    """
+    from repro.kernels import ops  # deferred: keep core import-light
+
+    inv_phi = 1.0 / phi
+    dtx_m = jnp.where(adj, d_tx, NEG)
+    if inv_phi.ndim == 1:
+        inv_new = ops.diffusive_phi(inv_phi[None], F[None], dtx_m[None])[0]
+    else:
+        inv_new = ops.diffusive_phi(inv_phi, F, dtx_m)
+    deg = jnp.sum(adj, axis=-1)
+    return jnp.where(deg > 0, 1.0 / inv_new, F)
+
+
 def phi_fixpoint(F: jax.Array, adj: jax.Array, d_tx: jax.Array,
                  iters: int = 16, phi0: Optional[jax.Array] = None
                  ) -> Tuple[jax.Array, jax.Array]:

@@ -1,3 +1,8 @@
+from repro.swarm.scenario import (CHANNEL_MODELS, FAULT_MODELS,
+                                  MOBILITY_MODELS, get_channel, get_fault,
+                                  get_mobility, mask_adjacency,
+                                  register_channel, register_fault,
+                                  register_mobility)
 from repro.swarm.simulator import (DISTRIBUTED, GREEDY, LOCAL_ONLY, RANDOM,
                                    RANDOM_ACYCLIC, STRATEGY_NAMES, run_many,
                                    run_sim)
@@ -5,4 +10,7 @@ from repro.swarm.tasks import TaskProfile, make_profile
 
 __all__ = ["run_sim", "run_many", "make_profile", "TaskProfile",
            "LOCAL_ONLY", "RANDOM", "RANDOM_ACYCLIC", "GREEDY", "DISTRIBUTED",
-           "STRATEGY_NAMES"]
+           "STRATEGY_NAMES",
+           "MOBILITY_MODELS", "CHANNEL_MODELS", "FAULT_MODELS",
+           "register_mobility", "register_channel", "register_fault",
+           "get_mobility", "get_channel", "get_fault", "mask_adjacency"]

@@ -1,5 +1,14 @@
-"""Communication model (paper §3.2): two-ray ground reflection pathloss →
-SNR (Eq. 4) → Shannon capacity (Eq. 3) → one-hop adjacency (Eq. 9)."""
+"""Communication models (paper §3.2 + DESIGN.md §3.4): pathloss → SNR
+(Eq. 4) → Shannon capacity (Eq. 3) → one-hop adjacency (Eq. 9).
+
+The pathloss stage is pluggable.  Every model exposes
+
+    pathloss_db(key, dist_m [N,N], cfg) -> [N,N] dB
+
+(the key feeds stochastic models — log-normal shadowing redraws per epoch;
+deterministic models ignore it) and is selected by name through
+``swarm/scenario.py``'s channel registry.
+"""
 from __future__ import annotations
 
 import jax
@@ -14,6 +23,11 @@ def pairwise_distance(pos: jax.Array) -> jax.Array:
     return jnp.sqrt(jnp.sum(jnp.square(d), axis=-1) + 1e-9)
 
 
+# ---------------------------------------------------------------------------
+# pathloss models
+# ---------------------------------------------------------------------------
+
+
 def two_ray_pathloss_db(dist_m: jax.Array, h_tx: float, h_rx: float
                         ) -> jax.Array:
     """Two-ray ground-reflection model (Rappaport §4.6), far-field form:
@@ -22,10 +36,50 @@ def two_ray_pathloss_db(dist_m: jax.Array, h_tx: float, h_rx: float
     return 40.0 * jnp.log10(d) - 20.0 * jnp.log10(h_tx * h_rx)
 
 
-def snr_db(dist_m: jax.Array, cfg: SwarmConfig) -> jax.Array:
+def two_ray(key, dist_m: jax.Array, cfg: SwarmConfig) -> jax.Array:
+    del key
+    return two_ray_pathloss_db(dist_m, cfg.altitude_m, cfg.altitude_m)
+
+
+def _fspl_1m_db(cfg: SwarmConfig) -> jax.Array:
+    """Friis free-space loss at the 1 m reference distance:
+    20 log10(f) - 147.55 (c = 3e8, isotropic antennas)."""
+    return 20.0 * jnp.log10(cfg.carrier_hz) - 147.55
+
+
+def free_space(key, dist_m: jax.Array, cfg: SwarmConfig) -> jax.Array:
+    """Friis free-space pathloss:
+    FSPL(dB) = 20 log10(d) + 20 log10(f) - 147.55."""
+    del key
+    d = jnp.maximum(dist_m, 1.0)
+    return 20.0 * jnp.log10(d) + _fspl_1m_db(cfg)
+
+
+def log_normal(key, dist_m: jax.Array, cfg: SwarmConfig) -> jax.Array:
+    """Log-distance pathloss with log-normal shadowing:
+    PL(dB) = FSPL(1 m) + 10·n·log10(d) + X,  X ~ N(0, σ²) symmetric per
+    link (drawn on the upper triangle, mirrored)."""
+    d = jnp.maximum(dist_m, 1.0)
+    base = _fspl_1m_db(cfg) + 10.0 * cfg.pathloss_exp * jnp.log10(d)
+    n = dist_m.shape[-1]
+    z = jax.random.normal(key, (n, n), jnp.float32) * cfg.shadowing_sigma_db
+    upper = jnp.triu(z, 1)
+    return base + upper + upper.T
+
+
+# ---------------------------------------------------------------------------
+# SNR / capacity / adjacency
+# ---------------------------------------------------------------------------
+
+
+def snr_from_pathloss_db(pl_db: jax.Array, cfg: SwarmConfig) -> jax.Array:
     """Eq. 4: SNR_ij = P_i - L(i,j) - N0   (all dB/dBm)."""
-    pl = two_ray_pathloss_db(dist_m, cfg.altitude_m, cfg.altitude_m)
-    return cfg.tx_power_dbm - pl - cfg.noise_dbm
+    return cfg.tx_power_dbm - pl_db - cfg.noise_dbm
+
+
+def snr_db(dist_m: jax.Array, cfg: SwarmConfig) -> jax.Array:
+    """Eq. 4 under the default two-ray model."""
+    return snr_from_pathloss_db(two_ray(None, dist_m, cfg), cfg)
 
 
 def capacity_bps(snr: jax.Array, cfg: SwarmConfig) -> jax.Array:
@@ -33,15 +87,19 @@ def capacity_bps(snr: jax.Array, cfg: SwarmConfig) -> jax.Array:
     return cfg.bandwidth_hz * jnp.log2(1.0 + jnp.power(10.0, snr / 10.0))
 
 
-def link_state(pos: jax.Array, cfg: SwarmConfig):
+def link_state(pos: jax.Array, cfg: SwarmConfig, key=None, pathloss_fn=None):
     """Returns (adj [N,N] bool, capacity [N,N] bit/s) at the given positions.
 
-    adj masks the diagonal and sub-threshold links (Eq. 9); capacity is
-    clamped to a tiny positive floor off-link so downstream divisions are
-    safe (those entries are never selected through adj).
+    ``pathloss_fn`` defaults to the two-ray model (the paper baseline);
+    ``key`` feeds stochastic pathloss models.  adj masks the diagonal and
+    sub-threshold links (Eq. 9); capacity is clamped to a tiny positive
+    floor off-link so downstream divisions are safe (those entries are
+    never selected through adj).
     """
+    if pathloss_fn is None:
+        pathloss_fn = two_ray
     dist = pairwise_distance(pos)
-    snr = snr_db(dist, cfg)
+    snr = snr_from_pathloss_db(pathloss_fn(key, dist, cfg), cfg)
     n = pos.shape[0]
     eye = jnp.eye(n, dtype=bool)
     adj = (snr >= cfg.snr_min_db) & ~eye

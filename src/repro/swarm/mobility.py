@@ -1,12 +1,34 @@
-"""Circular-trajectory mobility (paper §5): centers placed on a
-granularity-g grid over the mission area; each UAV orbits its center with
-radius `movement_radius_m` at `speed_mps`."""
+"""Mobility models for the scenario engine (DESIGN.md §3.4).
+
+Three models, all exposing the same epoch-stepped interface consumed by
+``swarm/scenario.py``'s registry:
+
+    init(key, cfg, n)            -> state pytree
+    step(state, key, cfg, t0)    -> (state', pos [N, 2])
+
+``step`` is called once per decision epoch (Δt = ``cfg.decision_period_s``)
+with the epoch start time ``t0``; stateless models (circular) evaluate a
+closed form at ``t0`` and ignore the key, so the default scenario's
+trajectories are bit-identical to the pre-engine simulator.
+
+* **circular** (paper §5): centers on a granularity-g grid over the mission
+  area; each UAV orbits its center at ``speed_mps``.
+* **random_waypoint**: uniform waypoint in the area, travel at a per-leg
+  speed ~ U[speed_min, speed_max], re-draw on arrival.
+* **gauss_markov**: velocity AR(1) with memory ``gm_alpha`` around a random
+  per-node mean heading; reflecting area boundaries.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import SwarmConfig
+
+
+# ---------------------------------------------------------------------------
+# circular orbits (paper §5 — the original model, closed form in t)
+# ---------------------------------------------------------------------------
 
 
 def init_mobility(key, cfg: SwarmConfig, n: int):
@@ -27,3 +49,83 @@ def positions_at(mob, cfg: SwarmConfig, t: jax.Array) -> jax.Array:
     ang = mob["phase0"] + mob["omega"] * t
     off = jnp.stack([jnp.cos(ang), jnp.sin(ang)], axis=-1)
     return mob["center"] + cfg.movement_radius_m * off
+
+
+def step_circular(state, key, cfg: SwarmConfig, t0):
+    del key  # deterministic given the init draw
+    return state, positions_at(state, cfg, t0)
+
+
+# ---------------------------------------------------------------------------
+# random waypoint
+# ---------------------------------------------------------------------------
+
+
+def init_random_waypoint(key, cfg: SwarmConfig, n: int):
+    kp, kw, ks = jax.random.split(key, 3)
+    pos = jax.random.uniform(kp, (n, 2), jnp.float32, 0.0, cfg.area_m)
+    wp = jax.random.uniform(kw, (n, 2), jnp.float32, 0.0, cfg.area_m)
+    speed = jax.random.uniform(ks, (n,), jnp.float32,
+                               cfg.speed_min_mps, cfg.speed_max_mps)
+    return {"pos": pos, "wp": wp, "speed": speed}
+
+
+def step_random_waypoint(state, key, cfg: SwarmConfig, t0):
+    n = state["pos"].shape[0]
+    # epoch-start contract: the first epoch (t0 = 0) observes the init
+    # placement; later epochs advance one decision period
+    dt = jnp.where(t0 > 0.0, cfg.decision_period_s, 0.0)
+    vec = state["wp"] - state["pos"]
+    dist = jnp.sqrt(jnp.sum(jnp.square(vec), axis=-1) + 1e-12)
+    hop = state["speed"] * dt
+    reached = dist <= hop
+    pos = jnp.where(reached[:, None], state["wp"],
+                    state["pos"] + vec / dist[:, None] * hop[:, None])
+    kw, ks = jax.random.split(key)
+    wp = jnp.where(reached[:, None],
+                   jax.random.uniform(kw, (n, 2), jnp.float32,
+                                      0.0, cfg.area_m),
+                   state["wp"])
+    speed = jnp.where(reached,
+                      jax.random.uniform(ks, (n,), jnp.float32,
+                                         cfg.speed_min_mps,
+                                         cfg.speed_max_mps),
+                      state["speed"])
+    return {"pos": pos, "wp": wp, "speed": speed}, pos
+
+
+# ---------------------------------------------------------------------------
+# Gauss-Markov
+# ---------------------------------------------------------------------------
+
+
+def init_gauss_markov(key, cfg: SwarmConfig, n: int):
+    kp, kh = jax.random.split(key)
+    pos = jax.random.uniform(kp, (n, 2), jnp.float32, 0.0, cfg.area_m)
+    theta = jax.random.uniform(kh, (n,), jnp.float32, 0.0, 2.0 * jnp.pi)
+    mean_speed = 0.5 * (cfg.speed_min_mps + cfg.speed_max_mps)
+    mean_vel = mean_speed * jnp.stack([jnp.cos(theta), jnp.sin(theta)],
+                                      axis=-1)
+    return {"pos": pos, "vel": mean_vel, "mean_vel": mean_vel}
+
+
+def step_gauss_markov(state, key, cfg: SwarmConfig, t0):
+    dt = cfg.decision_period_s
+    a = cfg.gm_alpha
+    w = jax.random.normal(key, state["vel"].shape, jnp.float32)
+    vel = (a * state["vel"] + (1.0 - a) * state["mean_vel"]
+           + cfg.gm_sigma_mps * jnp.sqrt(1.0 - a * a) * w)
+    # epoch-start contract: no advance (and no AR velocity step) at t0 = 0
+    vel = jnp.where(t0 > 0.0, vel, state["vel"])
+    pos = state["pos"] + vel * jnp.where(t0 > 0.0, dt, 0.0)
+    # reflect off the mission-area boundary: flip the offending component of
+    # BOTH vel and mean_vel — otherwise the AR(1) pull toward the original
+    # mean heading pins wall-facing nodes to the boundary
+    A = cfg.area_m
+    out_lo, out_hi = pos < 0.0, pos > A
+    pos = jnp.clip(jnp.where(out_lo, -pos, jnp.where(out_hi, 2.0 * A - pos,
+                                                     pos)), 0.0, A)
+    bounce = out_lo | out_hi
+    vel = jnp.where(bounce, -vel, vel)
+    mean_vel = jnp.where(bounce, -state["mean_vel"], state["mean_vel"])
+    return {"pos": pos, "vel": vel, "mean_vel": mean_vel}, pos

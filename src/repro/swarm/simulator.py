@@ -1,35 +1,45 @@
 """Vectorized time-stepped swarm simulator (paper §5 environment).
 
 One simulation = ``lax.scan`` over decision epochs (Δt = 200 ms); each epoch
-refreshes the channel/adjacency, runs the offloading strategy's decision
-rule once (Alg. 1), then an inner scan over fine ticks (default 10 ms)
-advances compute, transfers and Markov task arrivals.  The whole thing jits
-and ``vmap``s over Monte-Carlo runs (50 per the paper).
+refreshes the scenario (mobility → positions, channel → adjacency/capacity,
+fault → alive mask), runs the offloading strategy's decision rule once
+(Alg. 1), then an inner scan over fine ticks (default 10 ms) advances
+compute, transfers and Markov task arrivals.  The whole thing jits and
+``vmap``s over Monte-Carlo runs (50 per the paper).
+
+This module is only the scan skeleton + strategy dispatch; the parts live in
+  * ``swarm/scenario.py`` — mobility/channel/fault registries + arrivals,
+  * ``swarm/queues.py``   — struct-of-arrays task-queue ops,
+  * ``swarm/transfer.py`` — transfer initiate/progress/deliver,
+and the epoch φ update dispatches through ``kernels/ops.diffusive_phi``
+(Pallas on TPU, jnp reference elsewhere) via ``core.diffusive.phi_update_op``.
 
 Strategies (paper §5): 0 LocalOnly · 1 Random · 2 RandomAcyclic · 3 Greedy ·
 4 Distributed (ours, diffusive φ).  The strategy id is a *traced* scalar so
-all five share one executable.
+all five share one executable; the scenario is *static* config, so sweeping
+scenarios costs one compile per (cfg, n) pair and zero code edits.
 """
 from __future__ import annotations
 
 import functools
-from typing import Dict, NamedTuple, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import SwarmConfig
 from repro.core.decision import transfer_decision
-from repro.core.diffusive import phi_update
+from repro.core.diffusive import phi_update_op
 from repro.core.early_exit import (congestion_update, exit_accuracy,
                                    exit_boundary_layers, exit_label)
 from repro.core.early_exit import CongestionState
+from repro.swarm import transfer as transfer_mod
 from repro.swarm.channel import link_state
-from repro.swarm.mobility import init_mobility, positions_at
-from repro.swarm.tasks import (TaskProfile, boundary_bits, make_profile,
-                               snap_to_boundary)
+from repro.swarm.queues import head_slot, push, queued_gflops
+from repro.swarm.scenario import (burst_arrivals, get_channel, get_fault,
+                                  get_mobility, mask_adjacency)
+from repro.swarm.tasks import TaskProfile, make_profile
 
-INT_MAX = jnp.iinfo(jnp.int32).max
 BIG = 1e30
 
 LOCAL_ONLY, RANDOM, RANDOM_ACYCLIC, GREEDY, DISTRIBUTED = range(5)
@@ -45,12 +55,14 @@ STRATEGY_NAMES = ("LocalOnly", "Random", "RandomAcyclic", "Greedy",
 def init_state(key, cfg: SwarmConfig, n: int) -> Dict:
     Q = cfg.queue_slots
     kf, km = jax.random.split(key)
+    k_fault = jax.random.fold_in(key, 7)
     F = jnp.maximum(
         cfg.capability_mean
         + cfg.capability_std * jax.random.normal(kf, (n,), jnp.float32),
         50.0)
     return {
-        "mob": init_mobility(km, cfg, n),
+        "mob": get_mobility(cfg).init(km, cfg, n),
+        "alive": get_fault(cfg).init(k_fault, cfg, n),
         "F": F,
         # queues (struct-of-arrays)
         "q_active": jnp.zeros((n, Q), bool),
@@ -85,57 +97,6 @@ def init_state(key, cfg: SwarmConfig, n: int) -> Dict:
 
 
 # ---------------------------------------------------------------------------
-# queue helpers
-# ---------------------------------------------------------------------------
-
-
-def head_slot(st):
-    seqv = jnp.where(st["q_active"], st["q_seq"], INT_MAX)
-    head = jnp.argmin(seqv, axis=1)
-    has = jnp.any(st["q_active"], axis=1)
-    return head, has
-
-
-def queued_gflops(st, profile: TaskProfile) -> jax.Array:
-    rem = jnp.maximum(profile.total_gflops - st["q_cum"], 0.0)
-    return jnp.sum(jnp.where(st["q_active"], rem, 0.0), axis=1)
-
-
-def push(st, mask, cum, created, visited):
-    """Insert one task per node where mask; drops (with count) if full."""
-    n, Q = st["q_active"].shape
-    free = jnp.argmin(st["q_active"], axis=1)              # first False slot
-    has_free = ~jnp.all(st["q_active"], axis=1)
-    ok = mask & has_free
-    rows = jnp.arange(n)
-    seq = st["seq_counter"] + jnp.cumsum(ok.astype(jnp.int32)) - 1
-    st = dict(st)
-    st["q_active"] = st["q_active"].at[rows, free].set(
-        jnp.where(ok, True, st["q_active"][rows, free]))
-    st["q_cum"] = st["q_cum"].at[rows, free].set(
-        jnp.where(ok, cum, st["q_cum"][rows, free]))
-    st["q_created"] = st["q_created"].at[rows, free].set(
-        jnp.where(ok, created, st["q_created"][rows, free]))
-    st["q_seq"] = st["q_seq"].at[rows, free].set(
-        jnp.where(ok, seq, st["q_seq"][rows, free]))
-    st["q_visited"] = st["q_visited"].at[rows, free].set(
-        jnp.where(ok[:, None], visited, st["q_visited"][rows, free]))
-    st["seq_counter"] = st["seq_counter"] + jnp.sum(ok.astype(jnp.int32))
-    st["drop_count"] = st["drop_count"] + jnp.sum(
-        (mask & ~has_free).astype(jnp.float32))
-    return st
-
-
-def pop_head(st, mask):
-    head, _ = head_slot(st)
-    rows = jnp.arange(st["q_active"].shape[0])
-    st = dict(st)
-    st["q_active"] = st["q_active"].at[rows, head].set(
-        jnp.where(mask, False, st["q_active"][rows, head]))
-    return st
-
-
-# ---------------------------------------------------------------------------
 # per-tick dynamics
 # ---------------------------------------------------------------------------
 
@@ -166,63 +127,31 @@ def _compute_pass(st, budget, targets_cum, acc_levels, t_now, eJ):
     return st, budget - adv
 
 
-def _tick(st, key, cfg: SwarmConfig, profile: TaskProfile, cap, t_now):
+def _tick(st, key, cfg: SwarmConfig, profile: TaskProfile, cap, alive,
+          t_now):
     n = st["F"].shape[0]
-    rows = jnp.arange(n)
     tick = cfg.tick_s
 
-    # (a) Markov-modulated arrivals: ON/OFF burst chain per node; long-run
-    #     mean inter-arrival = task_period_s, burst rate = 1/(period·duty).
-    k_sw, k_ar = jax.random.split(key)
-    duty = cfg.burst_on_s / (cfg.burst_on_s + cfg.burst_off_s)
-    p_on_off = 1.0 - jnp.exp(-tick / cfg.burst_on_s)
-    p_off_on = 1.0 - jnp.exp(-tick / cfg.burst_off_s)
-    flip = jax.random.uniform(k_sw, (n,))
-    on = st["burst_on"]
+    # (a) Markov-modulated arrivals (down nodes don't generate)
     st = dict(st)
-    st["burst_on"] = jnp.where(on, flip >= p_on_off, flip < p_off_on)
-    p_arr = 1.0 - jnp.exp(-tick / (cfg.task_period_s * duty))
-    arrive = jax.random.bernoulli(k_ar, p_arr, (n,)) & st["burst_on"]
+    st["burst_on"], arrive = burst_arrivals(st["burst_on"], key, cfg)
+    arrive = arrive & alive
     st = push(st, arrive, jnp.zeros((n,)), jnp.full((n,), t_now),
               jnp.zeros((n, n), bool))
     st["gen_count"] = st["gen_count"] + jnp.sum(arrive.astype(jnp.float32))
 
-    # (b) compute (budget cascade x2: finish a task and start the next)
+    # (b) compute (budget cascade x2: finish a task and start the next;
+    #     down nodes hold their queues but burn no cycles)
     targets = profile.cum_gflops[jnp.clip(st["xi_layers"], 0,
                                           profile.gflops.shape[0])]
-    budget = st["F"] * tick
+    budget = jnp.where(alive, st["F"] * tick, 0.0)
     for _ in range(2):
         st, budget = _compute_pass(st, budget, targets,
                                    cfg.exit_accuracy, t_now,
                                    cfg.energy_per_gflop_j)
 
-    # (c) transfer progress + delivery (one delivery per receiver per tick)
-    rate = cap[rows, st["tx_dst"]]                         # bit/s (epoch-frozen)
-    active = st["tx_active"]
-    st["tx_bits"] = jnp.where(active, st["tx_bits"] - rate * tick,
-                              st["tx_bits"])
-    st["e_tx"] = st["e_tx"] + jnp.sum(active) * (
-        10.0 ** (cfg.tx_power_dbm / 10.0) * 1e-3) * tick
-    arrived = active & (st["tx_bits"] <= 0.0)
-    # receiver contention: lowest-index origin wins per destination
-    origin_rank = jnp.where(arrived, rows, INT_MAX)
-    winner = jnp.full((n,), INT_MAX).at[st["tx_dst"]].min(
-        jnp.where(arrived, origin_rank, INT_MAX))
-    deliver = arrived & (winner[st["tx_dst"]] == rows)
-
-    dst_mask = jnp.zeros((n,), bool).at[st["tx_dst"]].max(deliver)
-    # scatter in-flight fields to destination rows
-    inv = jnp.full((n,), 0, jnp.int32).at[st["tx_dst"]].max(
-        jnp.where(deliver, rows, 0))                        # origin per dst
-    cum_d = st["tx_cum"][inv]
-    created_d = st["tx_created"][inv]
-    visited_d = st["tx_visited"][inv] | jax.nn.one_hot(
-        inv, n, dtype=bool)                                 # mark origin
-    st = push(st, dst_mask, cum_d, created_d, visited_d)
-    st["tx_active"] = st["tx_active"] & ~deliver
-    st["tx_time_sum"] = st["tx_time_sum"] + jnp.sum(
-        jnp.where(deliver, t_now - st["tx_start"], 0.0))
-    return st
+    # (c) transfer progress + delivery
+    return transfer_mod.progress(st, cap, alive, cfg, t_now)
 
 
 # ---------------------------------------------------------------------------
@@ -238,8 +167,8 @@ def _strategy_decision(st, strategy, adj, d_tx, T, key, cfg: SwarmConfig):
     rows = jnp.arange(n)
     has_nbr = jnp.any(adj, axis=1)
 
-    # ---- Distributed (ours): Eqs. 10-13 ----------------------------------
-    phi = phi_update(st["phi"], st["F"], adj, d_tx)
+    # ---- Distributed (ours): Eqs. 10-13, kernel-dispatched ----------------
+    phi = phi_update_op(st["phi"], st["F"], adj, d_tx)
     dec = transfer_decision(T, phi, adj, cfg.gamma)
     dist = (dec.transfer, dec.target)
 
@@ -252,9 +181,13 @@ def _strategy_decision(st, strategy, adj, d_tx, T, key, cfg: SwarmConfig):
     greedy = (g_do, g_tgt)
 
     # ---- Random: uniform neighbor, w.p. 0.2 ------------------------------
+    # NB: the offload coin must not share k2 with the gumbel target draw —
+    # threefry counters would make coin u_j bit-identical to a target score
+    # for j, correlating "who offloads" with "who gets picked"
     gum = jax.random.gumbel(k2, (n, n))
     r_tgt = jnp.argmax(jnp.where(adj, gum, -BIG), axis=1)
-    r_do = jax.random.bernoulli(k2, cfg.random_offload_p, (n,)) & has_nbr
+    r_do = jax.random.bernoulli(jax.random.fold_in(k2, 1),
+                                cfg.random_offload_p, (n,)) & has_nbr
     random_ = (r_do, r_tgt)
 
     # ---- RandomAcyclic: uniform unvisited neighbor, w.p. 0.1 -------------
@@ -263,7 +196,8 @@ def _strategy_decision(st, strategy, adj, d_tx, T, key, cfg: SwarmConfig):
     a_has = jnp.any(amask, axis=1)
     a_tgt = jnp.argmax(jnp.where(amask, jax.random.gumbel(k3, (n, n)), -BIG),
                        axis=1)
-    a_do = jax.random.bernoulli(k3, cfg.random_acyclic_p, (n,)) & a_has
+    a_do = jax.random.bernoulli(jax.random.fold_in(k3, 1),
+                                cfg.random_acyclic_p, (n,)) & a_has
     acyc = (a_do, a_tgt)
 
     local = (jnp.zeros((n,), bool), jnp.zeros((n,), jnp.int32))
@@ -279,20 +213,26 @@ def _strategy_decision(st, strategy, adj, d_tx, T, key, cfg: SwarmConfig):
 
 def _epoch(st, key, epoch_idx, strategy, cfg: SwarmConfig,
            profile: TaskProfile):
-    n = st["F"].shape[0]
-    rows = jnp.arange(n)
     t0 = epoch_idx.astype(jnp.float32) * cfg.decision_period_s
+    # kd/kt reproduce the pre-engine key streams exactly; scenario keys are
+    # folded off the epoch key so the default scenario stays bit-identical
+    # (except Random/RandomAcyclic, whose key-reuse fix below is deliberate).
     kd, kt = jax.random.split(key)
+    k_mob = jax.random.fold_in(key, 11)
+    k_ch = jax.random.fold_in(key, 13)
+    k_fault = jax.random.fold_in(key, 17)
 
-    # 1. refresh channel at epoch start
-    pos = positions_at(st["mob"], cfg, t0)
-    adj, cap = link_state(pos, cfg)
+    # 1. refresh the scenario at epoch start
+    st = dict(st)
+    st["alive"] = get_fault(cfg).step(st["alive"], k_fault, cfg)
+    st["mob"], pos = get_mobility(cfg).step(st["mob"], k_mob, cfg, t0)
+    adj, cap = link_state(pos, cfg, key=k_ch, pathloss_fn=get_channel(cfg))
+    adj = mask_adjacency(adj, st["alive"])
     d_tx = jnp.where(adj, profile.bits_per_gflop / cap, BIG)
 
     # 2. strategy decision (Alg. 1 lines 2-5)
     T = queued_gflops(st, profile)
     do, tgt, phi = _strategy_decision(st, strategy, adj, d_tx, T, kd, cfg)
-    st = dict(st)
     st["phi"] = phi
 
     # 3. congestion-aware early exit (Alg. 1 lines 10-11, Eqs. 14-16)
@@ -303,36 +243,23 @@ def _epoch(st, key, epoch_idx, strategy, cfg: SwarmConfig,
     if cfg.early_exit_enabled:
         lbl = exit_label(cong.D, *cfg.exit_thresholds)
     else:
-        lbl = jnp.zeros((n,), jnp.int32)
+        lbl = jnp.zeros((st["F"].shape[0],), jnp.int32)
     st["xi_label"] = lbl
     st["xi_layers"] = exit_boundary_layers(lbl, cfg.exit_points,
                                            cfg.exit_finalize_layers)
 
     # 4. initiate transfers: pop head, snap to boundary (§3.1 discard)
-    head, has = head_slot(st)
+    _, has = head_slot(st)
     elig = do & has & ~st["tx_active"] & (tgt >= 0)
-    cum_h = st["q_cum"][rows, head]
-    cum_snap = snap_to_boundary(profile, cum_h)
-    bits = boundary_bits(profile, cum_h)
-    st["tx_dst"] = jnp.where(elig, tgt, st["tx_dst"])
-    st["tx_bits"] = jnp.where(elig, bits, st["tx_bits"])
-    st["tx_cum"] = jnp.where(elig, cum_snap, st["tx_cum"])
-    st["tx_created"] = jnp.where(elig, st["q_created"][rows, head],
-                                 st["tx_created"])
-    st["tx_visited"] = jnp.where(elig[:, None],
-                                 st["q_visited"][rows, head],
-                                 st["tx_visited"])
-    st["tx_start"] = jnp.where(elig, t0, st["tx_start"])
-    st["tx_count"] = st["tx_count"] + jnp.sum(elig.astype(jnp.float32))
-    st["tx_active"] = st["tx_active"] | elig
-    st = pop_head(st, elig)
+    st = transfer_mod.initiate(st, elig, tgt, t0, profile)
 
     # 5. fine ticks
     n_ticks = int(round(cfg.decision_period_s / cfg.tick_s))
 
     def tick_body(st, i):
         t_now = t0 + (i.astype(jnp.float32) + 1.0) * cfg.tick_s
-        st = _tick(st, jax.random.fold_in(kt, i), cfg, profile, cap, t_now)
+        st = _tick(st, jax.random.fold_in(kt, i), cfg, profile, cap,
+                   st["alive"], t_now)
         return st, None
 
     st, _ = jax.lax.scan(tick_body, st, jnp.arange(n_ticks))

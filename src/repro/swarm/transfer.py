@@ -1,0 +1,80 @@
+"""Single-outgoing-transfer machinery (paper §3.2, DESIGN.md §3.3).
+
+Each node carries at most one in-flight outgoing task transfer.  An epoch
+decision *initiates* a transfer (pop the FIFO head, snap its progress back
+to the last layer boundary per §3.1, ship the boundary activation bits);
+fine ticks *progress* it at the epoch-frozen link capacity and *deliver* it
+into the destination queue — one delivery per receiver per tick, lowest
+origin index winning contention.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SwarmConfig
+from repro.swarm.queues import INT_MAX, head_slot, pop_head, push
+from repro.swarm.tasks import TaskProfile, boundary_bits, snap_to_boundary
+
+
+def initiate(st, elig, tgt, t0, profile: TaskProfile):
+    """Start transfers where ``elig``: pop the head task, discard partial-
+    layer progress and stage the boundary activation for shipping."""
+    rows = jnp.arange(st["F"].shape[0])
+    head, _ = head_slot(st)
+    cum_h = st["q_cum"][rows, head]
+    cum_snap = snap_to_boundary(profile, cum_h)
+    bits = boundary_bits(profile, cum_h)
+    st = dict(st)
+    st["tx_dst"] = jnp.where(elig, tgt, st["tx_dst"])
+    st["tx_bits"] = jnp.where(elig, bits, st["tx_bits"])
+    st["tx_cum"] = jnp.where(elig, cum_snap, st["tx_cum"])
+    st["tx_created"] = jnp.where(elig, st["q_created"][rows, head],
+                                 st["tx_created"])
+    st["tx_visited"] = jnp.where(elig[:, None],
+                                 st["q_visited"][rows, head],
+                                 st["tx_visited"])
+    st["tx_start"] = jnp.where(elig, t0, st["tx_start"])
+    st["tx_count"] = st["tx_count"] + jnp.sum(elig.astype(jnp.float32))
+    st["tx_active"] = st["tx_active"] | elig
+    return pop_head(st, elig)
+
+
+def progress(st, cap, alive, cfg: SwarmConfig, t_now):
+    """One tick of transfer progress + delivery.
+
+    ``cap`` is the epoch-frozen [N,N] capacity; ``alive`` the epoch fault
+    mask — a transfer whose endpoint is down stalls (bits conserved) and
+    resumes when the node recovers.
+    """
+    n = st["F"].shape[0]
+    rows = jnp.arange(n)
+    tick = cfg.tick_s
+    rate = cap[rows, st["tx_dst"]]                         # bit/s
+    live = alive & alive[st["tx_dst"]]
+    active = st["tx_active"] & live
+    st = dict(st)
+    st["tx_bits"] = jnp.where(active, st["tx_bits"] - rate * tick,
+                              st["tx_bits"])
+    st["e_tx"] = st["e_tx"] + jnp.sum(active) * (
+        10.0 ** (cfg.tx_power_dbm / 10.0) * 1e-3) * tick
+    arrived = active & (st["tx_bits"] <= 0.0)
+    # receiver contention: lowest-index origin wins per destination
+    origin_rank = jnp.where(arrived, rows, INT_MAX)
+    winner = jnp.full((n,), INT_MAX).at[st["tx_dst"]].min(
+        jnp.where(arrived, origin_rank, INT_MAX))
+    deliver = arrived & (winner[st["tx_dst"]] == rows)
+
+    dst_mask = jnp.zeros((n,), bool).at[st["tx_dst"]].max(deliver)
+    # scatter in-flight fields to destination rows
+    inv = jnp.full((n,), 0, jnp.int32).at[st["tx_dst"]].max(
+        jnp.where(deliver, rows, 0))                        # origin per dst
+    cum_d = st["tx_cum"][inv]
+    created_d = st["tx_created"][inv]
+    visited_d = st["tx_visited"][inv] | jax.nn.one_hot(
+        inv, n, dtype=bool)                                 # mark origin
+    st = push(st, dst_mask, cum_d, created_d, visited_d)
+    st["tx_active"] = st["tx_active"] & ~deliver
+    st["tx_time_sum"] = st["tx_time_sum"] + jnp.sum(
+        jnp.where(deliver, t_now - st["tx_start"], 0.0))
+    return st

@@ -1,0 +1,1 @@
+from hypothesis.extra import numpy  # noqa: F401

@@ -1,0 +1,28 @@
+"""``hypothesis.extra.numpy`` stand-in: array strategies over the shim."""
+from __future__ import annotations
+
+import numpy as np
+
+from hypothesis.strategies import SearchStrategy
+
+
+def arrays(dtype, shape, *, elements: SearchStrategy = None,
+           fill=None, unique: bool = False) -> SearchStrategy:
+    if unique or fill is not None:
+        raise NotImplementedError("shim arrays(): unique/fill unsupported")
+    dtype = np.dtype(dtype)
+    dims = (shape,) if isinstance(shape, int) else tuple(shape)
+
+    def draw(rng: np.random.Generator):
+        if elements is not None:
+            flat = [elements.draw(rng) for _ in range(int(np.prod(dims)))]
+            return np.asarray(flat, dtype=dtype).reshape(dims)
+        if dtype.kind == "f":
+            return rng.standard_normal(dims).astype(dtype)
+        if dtype.kind in "iu":
+            return rng.integers(0, 100, dims).astype(dtype)
+        if dtype.kind == "b":
+            return rng.integers(0, 2, dims).astype(bool)
+        raise NotImplementedError(f"shim arrays(): dtype {dtype}")
+
+    return SearchStrategy(draw)

@@ -1,0 +1,77 @@
+"""Strategy objects for the fixed-seed hypothesis shim.
+
+Each strategy wraps a draw function ``rng -> value`` plus the combinators
+the repo's tests use (``map``/``filter``).  Bounds are inclusive, matching
+real hypothesis semantics.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+
+class SearchStrategy:
+    def __init__(self, draw_fn):
+        self._draw_fn = draw_fn
+
+    def draw(self, rng: np.random.Generator):
+        return self._draw_fn(rng)
+
+    def map(self, f):
+        return SearchStrategy(lambda rng: f(self.draw(rng)))
+
+    def filter(self, pred):
+        def draw(rng):
+            for _ in range(100):
+                v = self.draw(rng)
+                if pred(v):
+                    return v
+            raise ValueError("shim strategy filter rejected 100 draws")
+        return SearchStrategy(draw)
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def floats(min_value: float, max_value: float, *, allow_nan: bool = False,
+           allow_infinity: bool = False, width: int = 64) -> SearchStrategy:
+    lo, hi = float(min_value), float(max_value)
+    if not (math.isfinite(lo) and math.isfinite(hi)):
+        raise NotImplementedError("shim floats() needs finite bounds")
+    return SearchStrategy(lambda rng: float(rng.uniform(lo, hi)))
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rng: bool(rng.integers(0, 2)))
+
+
+def sampled_from(elements) -> SearchStrategy:
+    elements = list(elements)
+    return SearchStrategy(
+        lambda rng: elements[int(rng.integers(0, len(elements)))])
+
+
+def lists(element: SearchStrategy, *, min_size: int = 0,
+          max_size: int = 10) -> SearchStrategy:
+    def draw(rng):
+        k = int(rng.integers(min_size, max_size + 1))
+        return [element.draw(rng) for _ in range(k)]
+    return SearchStrategy(draw)
+
+
+def tuples(*strategies: SearchStrategy) -> SearchStrategy:
+    return SearchStrategy(lambda rng: tuple(s.draw(rng)
+                                            for s in strategies))
+
+
+def just(value) -> SearchStrategy:
+    return SearchStrategy(lambda rng: value)
+
+
+def one_of(*strategies: SearchStrategy) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: strategies[int(rng.integers(0, len(strategies)))]
+        .draw(rng))

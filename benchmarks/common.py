@@ -1,34 +1,70 @@
-"""Shared benchmark utilities: CI computation + CSV emission (one file per
-paper figure, `name,us_per_call,derived` rows for run.py)."""
+"""Shared benchmark utilities: fleet-sweep execution + CI computation + CSV
+emission (one file per paper figure, `name,us_per_call,derived` rows for
+run.py).
+
+The figure scripts declare :class:`repro.fleet.SweepSpec` grids and execute
+them through ``fleet_sweep`` below, which also records each figure's
+aggregate indices into ``artifacts/BENCH_fleet.json``.  Env knobs:
+
+  REPRO_FLEET_BACKEND=vmap|sharded|streaming   executor backend (default vmap)
+  REPRO_FLEET_CACHE=<dir>   content-addressed result cache: re-runs are free,
+                            interrupted streaming sweeps resume per chunk
+  REPRO_FULL_RUNS=1         the paper's 50 Monte-Carlo runs (default 16)
+"""
 from __future__ import annotations
 
-import dataclasses
 import os
 import time
-from typing import Dict, Sequence
+from typing import Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import SwarmConfig
+from repro.fleet import (ResultStore, SweepSpec, build_report, execute,
+                         write_bench_json)
+from repro.fleet.report import ci95  # noqa: F401  (re-export: fig scripts)
 from repro.swarm import STRATEGY_NAMES, run_many
 
 ART = os.path.join(os.path.dirname(__file__), "artifacts")
+BENCH_JSON = os.path.join(ART, "BENCH_fleet.json")
 
 # paper: 50 runs / 95% CI.  The bench default trades Monte-Carlo count for
 # wall time on this 1-core container; REPRO_FULL_RUNS=1 restores 50.
 DEFAULT_RUNS = 50 if os.environ.get("REPRO_FULL_RUNS") == "1" else 16
+DEFAULT_BACKEND = os.environ.get("REPRO_FLEET_BACKEND", "vmap")
 
 
-def ci95(x: np.ndarray):
-    m = x.mean()
-    half = 1.96 * x.std(ddof=1) / np.sqrt(len(x)) if len(x) > 1 else 0.0
-    return m, half
+def default_store() -> Optional[ResultStore]:
+    root = os.environ.get("REPRO_FLEET_CACHE")
+    return ResultStore(root) if root else None
+
+
+def fleet_sweep(spec: SweepSpec, backend: Optional[str] = None,
+                store: Optional[ResultStore] = None,
+                record: bool = True) -> Dict[str, Dict]:
+    """Execute a sweep through the fleet engine: ``{point label: metrics}``.
+
+    Backend/store default from the env knobs above; with ``record`` the
+    aggregated indices land in ``BENCH_fleet.json`` under
+    ``sweep:<spec.name>``.
+    """
+    backend = backend or DEFAULT_BACKEND
+    store = store if store is not None else default_store()
+    res = execute(spec, backend=backend, store=store)
+    if record:
+        write_bench_json(
+            BENCH_JSON, f"sweep:{spec.name}",
+            build_report(res, meta={"backend": backend,
+                                    "num_runs": spec.num_runs}))
+    return res
 
 
 def timed_sweep(cfg: SwarmConfig, strategies: Sequence[int], n: int,
                 runs: int, key=None) -> Dict[str, Dict]:
+    """Legacy per-config strategy sweep over ``run_many`` (kept for the
+    ablation scripts; the figure scripts go through ``fleet_sweep``)."""
     key = jax.random.PRNGKey(0) if key is None else key
     out = {}
     for s in strategies:

@@ -1,21 +1,23 @@
 """Paper Fig. 3: γ sensitivity — average latency vs outstanding workload."""
 from __future__ import annotations
 
-import dataclasses
 import os
 
-import jax.numpy as jnp
-
-from benchmarks.common import ART, DEFAULT_RUNS, ci95, timed_sweep, write_csv
+from benchmarks.common import (ART, DEFAULT_RUNS, ci95, fleet_sweep,
+                               write_csv)
 from repro.configs.base import SwarmConfig
+from repro.fleet import SweepSpec
 from repro.swarm import DISTRIBUTED
 
 
 def run(gammas=(0.002, 0.01, 0.02, 0.05, 0.1, 0.3), n=30, runs=DEFAULT_RUNS):
+    spec = SweepSpec.build("fig3_gamma", SwarmConfig(num_workers=n),
+                           axes={"gamma": tuple(gammas)},
+                           strategies=(DISTRIBUTED,), num_runs=runs)
+    res = fleet_sweep(spec)
     rows = []
-    for g in gammas:
-        cfg = dataclasses.replace(SwarmConfig(num_workers=n), gamma=g)
-        m = timed_sweep(cfg, [DISTRIBUTED], n, runs)["Distributed"]
+    for pt in spec.expand():
+        m, g = res[pt.label], pt.values["gamma"]
         lat, lat_ci = ci95(m["avg_latency_s"])
         rem, rem_ci = ci95(m["remaining_gflops"])
         tx, _ = ci95(m["transfers"])

@@ -4,30 +4,35 @@ from __future__ import annotations
 import dataclasses
 import os
 
-import numpy as np
-
-from benchmarks.common import ART, DEFAULT_RUNS, ci95, timed_sweep, write_csv
+from benchmarks.common import (ART, DEFAULT_RUNS, ci95, fleet_sweep,
+                               write_csv)
 from repro.configs.base import SwarmConfig
+from repro.fleet import SweepSpec
+from repro.swarm import STRATEGY_NAMES
 
 METRICS = ["avg_latency_s", "remaining_gflops", "avg_transfer_time_s",
            "jain_fairness", "energy_per_task_j", "fom"]
 
 
 def run(workers=(10, 20, 30, 40, 50), runs=DEFAULT_RUNS, sim_time=None):
+    base = SwarmConfig()
+    if sim_time:
+        base = dataclasses.replace(base, sim_time_s=sim_time)
+    spec = SweepSpec.build("fig4_workers", base,
+                           axes={"num_workers": tuple(workers)},
+                           strategies=tuple(range(5)), num_runs=runs)
+    res = fleet_sweep(spec)
     rows = []
-    for n in workers:
-        cfg = SwarmConfig(num_workers=n)
-        if sim_time:
-            cfg = dataclasses.replace(cfg, sim_time_s=sim_time)
-        res = timed_sweep(cfg, range(5), n, runs)
-        for name, m in res.items():
-            row = [n, name]
-            for k in METRICS:
-                mean, half = ci95(m[k])
-                row += [f"{mean:.6g}", f"{half:.3g}"]
-            rows.append(row)
-            print(f"N={n:3d} {name:14s} " + " ".join(
-                f"{k.split('_')[0][:4]}={ci95(m[k])[0]:.4g}" for k in METRICS))
+    for pt in spec.expand():
+        m, n = res[pt.label], pt.values["num_workers"]
+        name = STRATEGY_NAMES[pt.strategy]
+        row = [n, name]
+        for k in METRICS:
+            mean, half = ci95(m[k])
+            row += [f"{mean:.6g}", f"{half:.3g}"]
+        rows.append(row)
+        print(f"N={n:3d} {name:14s} " + " ".join(
+            f"{k.split('_')[0][:4]}={ci95(m[k])[0]:.4g}" for k in METRICS))
     hdr = "workers,strategy," + ",".join(
         f"{k},{k}_ci95" for k in METRICS)
     write_csv(os.path.join(ART, "fig4_workers.csv"), hdr, rows)

@@ -2,28 +2,34 @@
 (60→100 ms) at 30 workers."""
 from __future__ import annotations
 
-import dataclasses
 import os
 
-from benchmarks.common import ART, DEFAULT_RUNS, ci95, timed_sweep, write_csv
+from benchmarks.common import (ART, DEFAULT_RUNS, ci95, fleet_sweep,
+                               write_csv)
 from repro.configs.base import SwarmConfig
+from repro.fleet import SweepSpec
+from repro.swarm import STRATEGY_NAMES
 
 
 def run(periods_ms=(60, 70, 80, 90, 100), n=30, runs=DEFAULT_RUNS):
+    spec = SweepSpec.build(
+        "fig5_rate", SwarmConfig(num_workers=n),
+        axes={"period_ms": tuple((p, {"task_period_s": p / 1000.0})
+                                 for p in periods_ms)},
+        strategies=tuple(range(5)), num_runs=runs)
+    res = fleet_sweep(spec)
     rows = []
-    for p in periods_ms:
-        cfg = dataclasses.replace(SwarmConfig(num_workers=n),
-                                  task_period_s=p / 1000.0)
-        res = timed_sweep(cfg, range(5), n, runs)
-        for name, m in res.items():
-            lat, lat_ci = ci95(m["avg_latency_s"])
-            rem, rem_ci = ci95(m["remaining_gflops"])
-            fom, fom_ci = ci95(m["fom"])
-            rows.append([p, name, f"{lat:.6g}", f"{lat_ci:.3g}",
-                         f"{rem:.6g}", f"{rem_ci:.3g}", f"{fom:.6g}",
-                         f"{fom_ci:.3g}"])
-            print(f"period={p}ms {name:14s} lat={lat:.4g} rem={rem:.5g} "
-                  f"fom={fom:.5g}")
+    for pt in spec.expand():
+        m, p = res[pt.label], pt.values["period_ms"]
+        name = STRATEGY_NAMES[pt.strategy]
+        lat, lat_ci = ci95(m["avg_latency_s"])
+        rem, rem_ci = ci95(m["remaining_gflops"])
+        fom, fom_ci = ci95(m["fom"])
+        rows.append([p, name, f"{lat:.6g}", f"{lat_ci:.3g}",
+                     f"{rem:.6g}", f"{rem_ci:.3g}", f"{fom:.6g}",
+                     f"{fom_ci:.3g}"])
+        print(f"period={p}ms {name:14s} lat={lat:.4g} rem={rem:.5g} "
+              f"fom={fom:.5g}")
     write_csv(os.path.join(ART, "fig5_rate.csv"),
               "period_ms,strategy,latency_s,latency_ci,remaining_gflops,"
               "remaining_ci,fom,fom_ci", rows)

@@ -1,29 +1,34 @@
 """Paper Fig. 6: latency / remaining GFLOPs / FOM vs mission-area size."""
 from __future__ import annotations
 
-import dataclasses
 import os
 
-from benchmarks.common import ART, DEFAULT_RUNS, ci95, timed_sweep, write_csv
+from benchmarks.common import (ART, DEFAULT_RUNS, ci95, fleet_sweep,
+                               write_csv)
 from repro.configs.base import SwarmConfig
-from repro.swarm import DISTRIBUTED, LOCAL_ONLY
+from repro.fleet import SweepSpec
+from repro.swarm import DISTRIBUTED, LOCAL_ONLY, STRATEGY_NAMES
 
 
 def run(areas_km=(10, 20, 30, 40), n=30, runs=DEFAULT_RUNS):
+    spec = SweepSpec.build(
+        "fig6_area", SwarmConfig(num_workers=n),
+        axes={"area_km": tuple((a, {"area_m": a * 1000.0})
+                               for a in areas_km)},
+        strategies=(LOCAL_ONLY, DISTRIBUTED), num_runs=runs)
+    res = fleet_sweep(spec)
     rows = []
-    for a in areas_km:
-        cfg = dataclasses.replace(SwarmConfig(num_workers=n),
-                                  area_m=a * 1000.0)
-        res = timed_sweep(cfg, [LOCAL_ONLY, DISTRIBUTED], n, runs)
-        for name, m in res.items():
-            lat, lat_ci = ci95(m["avg_latency_s"])
-            rem, rem_ci = ci95(m["remaining_gflops"])
-            fom, fom_ci = ci95(m["fom"])
-            rows.append([a, name, f"{lat:.6g}", f"{lat_ci:.3g}",
-                         f"{rem:.6g}", f"{rem_ci:.3g}", f"{fom:.6g}",
-                         f"{fom_ci:.3g}"])
-            print(f"area={a}km {name:14s} lat={lat:.4g} rem={rem:.5g} "
-                  f"fom={fom:.5g}")
+    for pt in spec.expand():
+        m, a = res[pt.label], pt.values["area_km"]
+        name = STRATEGY_NAMES[pt.strategy]
+        lat, lat_ci = ci95(m["avg_latency_s"])
+        rem, rem_ci = ci95(m["remaining_gflops"])
+        fom, fom_ci = ci95(m["fom"])
+        rows.append([a, name, f"{lat:.6g}", f"{lat_ci:.3g}",
+                     f"{rem:.6g}", f"{rem_ci:.3g}", f"{fom:.6g}",
+                     f"{fom_ci:.3g}"])
+        print(f"area={a}km {name:14s} lat={lat:.4g} rem={rem:.5g} "
+              f"fom={fom:.5g}")
     write_csv(os.path.join(ART, "fig6_area.csv"),
               "area_km,strategy,latency_s,latency_ci,remaining_gflops,"
               "remaining_ci,fom,fom_ci", rows)

@@ -2,11 +2,12 @@
 remaining GFLOPs, fairness, energy, FOM vs workers (Distributed strategy)."""
 from __future__ import annotations
 
-import dataclasses
 import os
 
-from benchmarks.common import ART, DEFAULT_RUNS, ci95, timed_sweep, write_csv
+from benchmarks.common import (ART, DEFAULT_RUNS, ci95, fleet_sweep,
+                               write_csv)
 from repro.configs.base import SwarmConfig
+from repro.fleet import SweepSpec
 from repro.swarm import DISTRIBUTED
 
 METRICS = ["avg_accuracy", "avg_latency_s", "remaining_gflops",
@@ -14,19 +15,24 @@ METRICS = ["avg_accuracy", "avg_latency_s", "remaining_gflops",
 
 
 def run(workers=(10, 20, 30, 40, 50), runs=DEFAULT_RUNS):
+    spec = SweepSpec.build(
+        "fig7_earlyexit", SwarmConfig(),
+        axes={"num_workers": tuple(workers),
+              "early_exit": (("off", {"early_exit_enabled": False}),
+                             ("on", {"early_exit_enabled": True}))},
+        strategies=(DISTRIBUTED,), num_runs=runs)
+    res = fleet_sweep(spec)
     rows = []
-    for n in workers:
-        for ee in (False, True):
-            cfg = dataclasses.replace(SwarmConfig(num_workers=n),
-                                      early_exit_enabled=ee)
-            m = timed_sweep(cfg, [DISTRIBUTED], n, runs)["Distributed"]
-            row = [n, "on" if ee else "off"]
-            for k in METRICS:
-                mean, half = ci95(m[k])
-                row += [f"{mean:.6g}", f"{half:.3g}"]
-            rows.append(row)
-            print(f"N={n:3d} early_exit={'on ' if ee else 'off'} " + " ".join(
-                f"{k.split('_')[0][:4]}={ci95(m[k])[0]:.4g}" for k in METRICS))
+    for pt in spec.expand():
+        m = res[pt.label]
+        n, ee = pt.values["num_workers"], pt.values["early_exit"]
+        row = [n, ee]
+        for k in METRICS:
+            mean, half = ci95(m[k])
+            row += [f"{mean:.6g}", f"{half:.3g}"]
+        rows.append(row)
+        print(f"N={n:3d} early_exit={ee:3s} " + " ".join(
+            f"{k.split('_')[0][:4]}={ci95(m[k])[0]:.4g}" for k in METRICS))
     hdr = "workers,early_exit," + ",".join(f"{k},{k}_ci95" for k in METRICS)
     write_csv(os.path.join(ART, "fig7_earlyexit.csv"), hdr, rows)
     return rows

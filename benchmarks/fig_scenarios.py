@@ -1,18 +1,22 @@
 """Scenario robustness sweep (beyond-paper): all five strategies across
-mobility × channel × fault profiles, selected purely via SwarmConfig.
+mobility × channel × fault profiles, declared as one fleet SweepSpec.
 
 The paper's claim is that the diffusive metric stays robust "when the swarm
 grows or the topology shifts rapidly" — this sweep tests exactly that:
-random-waypoint / Gauss-Markov mobility, free-space / log-normal-shadowed
-channels and Markov node churn, against the circular/two-ray baseline.
+random-waypoint / Gauss-Markov / Lévy-flight mobility, free-space /
+log-normal / Rician / Nakagami channels and Markov node churn, against the
+circular/two-ray baseline.
 """
 from __future__ import annotations
 
 import dataclasses
 import os
 
-from benchmarks.common import ART, DEFAULT_RUNS, ci95, timed_sweep, write_csv
+from benchmarks.common import (ART, DEFAULT_RUNS, ci95, fleet_sweep,
+                               write_csv)
 from repro.configs.base import SwarmConfig
+from repro.fleet import SweepSpec
+from repro.swarm import STRATEGY_NAMES
 
 METRICS = ["avg_latency_s", "remaining_gflops", "jain_fairness",
            "energy_per_task_j", "fom"]
@@ -21,9 +25,12 @@ SCENARIOS = (
     ("baseline", {}),
     ("rwp", {"mobility_model": "random_waypoint"}),
     ("gauss_markov", {"mobility_model": "gauss_markov"}),
+    ("levy", {"mobility_model": "levy_flight"}),
     ("shadowed", {"mobility_model": "random_waypoint",
                   "channel_model": "log_normal"}),
     ("free_space", {"channel_model": "free_space"}),
+    ("rician", {"channel_model": "rician"}),
+    ("nakagami", {"channel_model": "nakagami"}),
     ("churn", {"fault_model": "markov",
                "fault_mean_up_s": 20.0, "fault_mean_down_s": 4.0}),
     ("rwp_churn", {"mobility_model": "random_waypoint",
@@ -32,20 +39,25 @@ SCENARIOS = (
 
 
 def run(scenarios=SCENARIOS, n=20, runs=DEFAULT_RUNS, sim_time=20.0):
+    base = dataclasses.replace(SwarmConfig(), num_workers=n,
+                               sim_time_s=sim_time)
+    spec = SweepSpec.build(
+        "fig_scenarios", base,
+        axes={"scenario": tuple((name, dict(ov)) for name, ov in scenarios)},
+        strategies=tuple(range(5)), num_runs=runs)
+    res = fleet_sweep(spec)
     rows = []
-    for name, overrides in scenarios:
-        cfg = dataclasses.replace(SwarmConfig(), num_workers=n,
-                                  sim_time_s=sim_time, **overrides)
-        res = timed_sweep(cfg, range(5), n, runs)
-        for strat, m in res.items():
-            row = [name, strat]
-            for k in METRICS:
-                mean, half = ci95(m[k])
-                row += [f"{mean:.6g}", f"{half:.3g}"]
-            rows.append(row)
-            print(f"{name:12s} {strat:14s} " + " ".join(
-                f"{k.split('_')[0][:4]}={ci95(m[k])[0]:.4g}"
-                for k in METRICS))
+    for pt in spec.expand():
+        m, name = res[pt.label], pt.values["scenario"]
+        strat = STRATEGY_NAMES[pt.strategy]
+        row = [name, strat]
+        for k in METRICS:
+            mean, half = ci95(m[k])
+            row += [f"{mean:.6g}", f"{half:.3g}"]
+        rows.append(row)
+        print(f"{name:12s} {strat:14s} " + " ".join(
+            f"{k.split('_')[0][:4]}={ci95(m[k])[0]:.4g}"
+            for k in METRICS))
     hdr = "scenario,strategy," + ",".join(f"{k},{k}_ci95" for k in METRICS)
     write_csv(os.path.join(ART, "fig_scenarios.csv"), hdr, rows)
     return rows

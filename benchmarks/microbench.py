@@ -1,8 +1,17 @@
 """Kernel-path microbenchmarks (CPU ref path; µs/call).  The Pallas kernels
 themselves target TPU — interpret-mode timings are not meaningful, so this
-times the dispatch path the models actually execute here."""
+times the dispatch path the models actually execute here.
+
+``run_phi_sweep`` additionally sweeps the diffusive-φ reduction across swarm
+sizes (jnp reference vs interpret-mode Pallas, which checks the kernel's
+lowering at size rather than its speed) and records the rows into
+``artifacts/BENCH_fleet.json`` — the seed of the φ wall-clock trajectory the
+ROADMAP tracks toward TPU numbers at N ≥ 1k.  ``REPRO_BENCH_FAST=1`` keeps
+the sweep to N = 256 (interpret mode is minutes-slow at N = 4096).
+"""
 from __future__ import annotations
 
+import os
 import time
 
 import jax
@@ -10,10 +19,13 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 
+ART = os.path.join(os.path.dirname(__file__), "artifacts")
+
 
 def bench(fn, *args, iters=5):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
+    # one warm-up call (block_until_ready handles tuple outputs as pytrees);
+    # interpret-mode Pallas fns re-execute per call, so never call twice here
+    jax.block_until_ready(fn(*args))
     t0 = time.perf_counter()
     for _ in range(iters):
         jax.block_until_ready(fn(*args))
@@ -65,5 +77,43 @@ def run():
     return rows
 
 
+def run_phi_sweep(ns=(256, 1024, 4096), runs_axis=1, iters=2,
+                  out_json=os.path.join(ART, "BENCH_fleet.json")):
+    """diffusive_phi at swarm scale: jnp reference vs Pallas interpret mode.
+
+    Returns the recorded rows; also written to ``BENCH_fleet.json`` under
+    ``microbench_diffusive_phi``.
+    """
+    from repro.fleet.report import write_bench_json
+    from repro.kernels.diffusive_phi import diffusive_phi as pl_phi
+
+    key = jax.random.PRNGKey(0)
+    rows = []
+    for n in ns:
+        kF, kA = jax.random.split(jax.random.fold_in(key, n))
+        F = jax.random.uniform(kF, (runs_axis, n), jnp.float32, 100, 500)
+        dtx = jnp.where(jax.random.bernoulli(kA, 0.3, (runs_axis, n, n)),
+                        1e-3, -1e30)
+        inv_phi = 1.0 / F
+        ref_us = bench(jax.jit(ref.diffusive_phi), inv_phi, F, dtx,
+                       iters=iters)
+        # interpret=True compiles + emulates the TPU kernel on CPU — a
+        # lowering-at-scale check, not a performance number (that needs TPU)
+        it = 1 if n >= 4096 else iters
+        pal_us = bench(lambda a, b, c: pl_phi(a, b, c, interpret=True),
+                       inv_phi, F, dtx, iters=it)
+        row = {"n": int(n), "runs_axis": int(runs_axis),
+               "ref_us": round(ref_us, 1),
+               "pallas_interpret_us": round(pal_us, 1)}
+        rows.append(row)
+        print(f"diffusive_phi_n{n},{ref_us:.1f},ref_R{runs_axis}")
+        print(f"diffusive_phi_n{n},{pal_us:.1f},pallas_interpret_R{runs_axis}")
+    write_bench_json(out_json, "microbench_diffusive_phi", rows)
+    print(f"wrote {out_json} (microbench_diffusive_phi, {len(rows)} sizes)")
+    return rows
+
+
 if __name__ == "__main__":
     run()
+    run_phi_sweep(ns=(256,) if os.environ.get("REPRO_BENCH_FAST") == "1"
+                  else (256, 1024, 4096))

@@ -23,6 +23,8 @@ def main() -> None:
 
     print("== microbench (name,us_per_call,derived) ==")
     microbench.run()
+    print("\n== diffusive_phi at swarm scale (ref vs Pallas interpret) ==")
+    microbench.run_phi_sweep(ns=(256,) if FAST else (256, 1024, 4096))
 
     kw = {"runs": 2} if FAST else {}
 

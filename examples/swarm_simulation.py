@@ -1,11 +1,17 @@
 """Run the paper's UAV-swarm simulation head-to-head: all five offloading
 strategies at 30 workers, with and without congestion-aware early exit.
 
-Scenario selection is pure config — e.g. random-waypoint mobility over a
-log-normal-shadowed channel with node churn:
+Scenario selection is pure config, and the Monte-Carlo batch executes
+through the fleet engine — e.g. random-waypoint mobility over a log-normal
+channel with node churn, Monte-Carlo axis sharded over host devices:
 
-    PYTHONPATH=src python examples/swarm_simulation.py [--runs 8] \
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src python examples/swarm_simulation.py --num-runs 16 \
+        --backend sharded \
         --mobility random_waypoint --channel log_normal --fault markov
+
+``--backend streaming`` caps memory at one swarm state per chunk (the
+N >= 1k regime); all backends are bit-identical (DESIGN.md §8).
 """
 import argparse
 import dataclasses
@@ -15,7 +21,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import SwarmConfig
-from repro.swarm import STRATEGY_NAMES, run_many
+from repro.fleet import BACKENDS, run_batch
+from repro.swarm import STRATEGY_NAMES
 
 
 def show(tag, m):
@@ -29,9 +36,15 @@ def show(tag, m):
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--runs", type=int, default=8)
+    ap.add_argument("--num-runs", "--runs", dest="num_runs", type=int,
+                    default=8, help="Monte-Carlo runs per strategy")
     ap.add_argument("--workers", type=int, default=30)
     ap.add_argument("--sim-time", type=float, default=50.0)
+    ap.add_argument("--backend", default="vmap", choices=BACKENDS,
+                    help="fleet executor backend (bit-identical; sharded "
+                         "splits runs over devices, streaming bounds memory)")
+    ap.add_argument("--chunk-size", type=int, default=8,
+                    help="runs per chunk for --backend streaming")
     from repro.swarm import CHANNEL_MODELS, FAULT_MODELS, MOBILITY_MODELS
     ap.add_argument("--mobility", default="circular",
                     choices=sorted(MOBILITY_MODELS))
@@ -46,19 +59,23 @@ def main():
                               mobility_model=args.mobility,
                               channel_model=args.channel,
                               fault_model=args.fault)
-    print(f"{args.workers} UAVs, {args.sim_time:.0f}s, {args.runs} runs, "
+    print(f"{args.workers} UAVs, {args.sim_time:.0f}s, {args.num_runs} runs "
+          f"(backend={args.backend}, {len(jax.devices())} device(s)), "
           "bursty Markov arrivals (60 ms mean), scenario="
           f"{args.mobility}/{args.channel}/fault:{args.fault}")
 
+    def batch(cfg, s):
+        m = run_batch(key, cfg, jnp.int32(s), args.workers, args.num_runs,
+                      backend=args.backend, chunk_size=args.chunk_size)
+        return {k: np.asarray(v) for k, v in m.items()}
+
     print("\nno early exit (paper Fig. 4 regime):")
     for s, name in enumerate(STRATEGY_NAMES):
-        m = run_many(key, cfg, jnp.int32(s), args.workers, args.runs)
-        show(name, {k: np.asarray(v) for k, v in m.items()})
+        show(name, batch(cfg, s))
 
     print("\nDistributed + congestion-aware early exit (Fig. 7):")
     cfg_ee = dataclasses.replace(cfg, early_exit_enabled=True)
-    m = run_many(key, cfg_ee, jnp.int32(4), args.workers, args.runs)
-    show("Distributed+EE", {k: np.asarray(v) for k, v in m.items()})
+    show("Distributed+EE", batch(cfg_ee, 4))
 
 
 if __name__ == "__main__":

@@ -314,20 +314,25 @@ class SwarmConfig:
     # --- scenario engine (DESIGN.md §3.4): string-keyed model selection ---
     # Every field below is static under jit, so sweeping scenarios is a pure
     # config change — no code edits, one executable per (cfg, n) pair.
-    mobility_model: str = "circular"         # circular|random_waypoint|gauss_markov
-    channel_model: str = "two_ray"           # two_ray|free_space|log_normal
+    # mobility: circular|random_waypoint|gauss_markov|levy_flight
+    mobility_model: str = "circular"
+    # channel: two_ray|free_space|log_normal|rician|nakagami
+    channel_model: str = "two_ray"
     fault_model: str = "none"                # none|markov
-    # random-waypoint / Gauss-Markov mobility parameters
+    # random-waypoint / Gauss-Markov / Lévy mobility parameters
     speed_min_mps: float = 25.0
     speed_max_mps: float = 100.0
     gm_alpha: float = 0.85                   # Gauss-Markov velocity memory
     gm_sigma_mps: float = 20.0               # Gauss-Markov velocity noise
-    # free-space / log-normal channel parameters
+    levy_alpha: float = 1.6                  # Pareto tail of Lévy hop length
+    # free-space / log-normal / fading channel parameters
     carrier_hz: float = 2.4e9
     # log-distance exponent (1 m reference); at the 20 km mission scale,
     # 2.0 keeps a sparse multi-hop topology — exponents > 2.2 disconnect it
     pathloss_exp: float = 2.0
     shadowing_sigma_db: float = 6.0          # log-normal shadowing std
+    rician_k_db: float = 6.0                 # Rician K-factor (LoS/NLoS dB)
+    nakagami_m: float = 2.0                  # Nakagami shape (1 = Rayleigh)
     # node fault/churn (markov): mean dwell times of the up/down chain
     fault_mean_up_s: float = 30.0
     fault_mean_down_s: float = 5.0

@@ -1,0 +1,19 @@
+"""`repro.fleet` — sharded Monte-Carlo sweep engine (DESIGN.md §8).
+
+Declare a scenario grid as a :class:`SweepSpec`, execute it on any backend
+(``vmap`` / ``sharded`` / ``streaming`` — bit-identical), cache/resume
+through :class:`ResultStore`, aggregate with :mod:`repro.fleet.report`.
+"""
+from repro.fleet.executor import (BACKENDS, SweepInterrupted, execute,
+                                  run_batch, run_point)
+from repro.fleet.report import (build_report, ci95, latency_cdf,
+                                load_bench_json, point_indices,
+                                write_bench_json)
+from repro.fleet.store import ResultStore, code_version, point_digest
+from repro.fleet.sweep import SweepPoint, SweepSpec
+
+__all__ = ["SweepSpec", "SweepPoint", "BACKENDS", "SweepInterrupted",
+           "execute", "run_batch", "run_point",
+           "ResultStore", "point_digest", "code_version",
+           "build_report", "point_indices", "latency_cdf", "ci95",
+           "load_bench_json", "write_bench_json"]

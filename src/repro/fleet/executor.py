@@ -1,0 +1,213 @@
+"""Execution backends for Monte-Carlo sweep points (DESIGN.md §8.2).
+
+All three backends batch the *seed* axis of one :class:`SweepPoint` around
+the single-simulation ``run_sim`` and are bit-identical on equal
+``(cfg, strategy, n, num_runs, seed)`` — proven by tests — so the choice is
+purely operational:
+
+  * ``vmap``      — one fused executable over all runs on one device; the
+                    default, and exactly the historical ``run_many`` path
+                    (``swarm.run_many`` routes here, so the simulator and
+                    the benchmarks share this batching code).
+  * ``sharded``   — ``shard_map`` over a 1-D ``("mc",)`` device mesh (built
+                    through ``repro.compat.shard_map``, same shim as
+                    ``models/moe.py``): each device vmaps its slice of the
+                    run axis.  Run count is padded up to the device count by
+                    repeating the last key (padding is computed then
+                    discarded — never over-split the key, key-prefix
+                    stability does not hold across split widths).
+  * ``streaming`` — a host loop over fixed-size chunks; inside a chunk
+                    ``jax.lax.map`` runs simulations *serially* with the
+                    chunk key buffer donated, so peak memory is one swarm
+                    state + the per-run summary rows regardless of N or run
+                    count (the N ≥ 1k regime).  With a store attached, each
+                    completed chunk checkpoints, and a killed sweep resumes
+                    at the last completed chunk.
+
+Strategy ids stay *traced* scalars (one executable covers all five
+strategies per cfg), configs stay static — identical compile economics to
+the simulator itself.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compat import shard_map
+from repro.configs.base import SwarmConfig
+from repro.fleet.store import ResultStore, code_version, point_digest
+from repro.fleet.sweep import SweepPoint, SweepSpec
+from repro.swarm.simulator import run_sim
+
+BACKENDS = ("vmap", "sharded", "streaming")
+DEFAULT_CHUNK = 8
+
+
+class SweepInterrupted(RuntimeError):
+    """Raised by the streaming backend when ``max_chunks`` is reached —
+    a deterministic stand-in for preemption in resume tests; progress up to
+    the interrupt is checkpointed in the store."""
+
+
+def _pad_keys(keys: jax.Array, to: int) -> jax.Array:
+    pad = to - keys.shape[0]
+    if pad <= 0:
+        return keys
+    return jnp.concatenate(
+        [keys, jnp.broadcast_to(keys[-1:], (pad,) + keys.shape[1:])], axis=0)
+
+
+# ---------------------------------------------------------------------------
+# backends (each: key -> dict of [num_runs] metric arrays)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "n", "num_runs"))
+def _vmap_call(key, cfg: SwarmConfig, strategy, n: int, num_runs: int):
+    keys = jax.random.split(key, num_runs)
+    return jax.vmap(lambda k: run_sim(k, cfg, strategy, n))(keys)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "n", "mesh"))
+def _sharded_call(keys, cfg: SwarmConfig, strategy, n: int, mesh):
+    from jax.sharding import PartitionSpec as P
+    return shard_map(
+        lambda ks: jax.vmap(lambda k: run_sim(k, cfg, strategy, n))(ks),
+        mesh=mesh, in_specs=P("mc"), out_specs=P("mc"))(keys)
+
+
+@functools.lru_cache(maxsize=2)
+def _stream_chunk_fn(donate: bool):
+    def chunk(keys, cfg: SwarmConfig, strategy, n: int):
+        return jax.lax.map(lambda k: run_sim(k, cfg, strategy, n), keys)
+    return jax.jit(chunk, static_argnames=("cfg", "n"),
+                   donate_argnums=(0,) if donate else ())
+
+
+def _stream_chunk(keys, cfg: SwarmConfig, strategy, n: int):
+    # donate the chunk key buffer where the runtime honors it (TPU/GPU —
+    # the memory-bounded regime streaming exists for); CPU XLA declines
+    # donation and would warn on every compile
+    return _stream_chunk_fn(jax.default_backend() != "cpu")(
+        keys, cfg, strategy, n)
+
+
+def _run_sharded(key, cfg: SwarmConfig, strategy, n: int, num_runs: int):
+    from jax.sharding import Mesh
+    devs = np.asarray(jax.devices())
+    mesh = Mesh(devs, ("mc",))
+    padded = (num_runs + len(devs) - 1) // len(devs) * len(devs)
+    keys = _pad_keys(jax.random.split(key, num_runs), padded)
+    out = _sharded_call(keys, cfg, strategy, n, mesh)
+    return jax.tree.map(lambda x: x[:num_runs], out)
+
+
+def _run_streaming(key, cfg: SwarmConfig, strategy, n: int, num_runs: int,
+                   chunk_size: int, store: Optional[ResultStore] = None,
+                   digest: Optional[str] = None,
+                   max_chunks: Optional[int] = None
+                   ) -> Dict[str, np.ndarray]:
+    chunk = max(1, min(chunk_size, num_runs))
+    n_chunks = (num_runs + chunk - 1) // chunk
+    keys = jax.random.split(key, num_runs)
+
+    done, accum = 0, None
+    if store is not None and digest is not None:
+        done, accum = store.load_partial(digest, chunk_size=chunk)
+        done = min(done, n_chunks)
+
+    for c in range(done, n_chunks):
+        if max_chunks is not None and c >= max_chunks:
+            raise SweepInterrupted(
+                f"stopped after {c}/{n_chunks} chunks (max_chunks)")
+        ks = _pad_keys(keys[c * chunk:(c + 1) * chunk], chunk)
+        out = _stream_chunk(ks, cfg, strategy, n)
+        out = {k: np.asarray(v) for k, v in out.items()}
+        if accum is None:
+            accum = out
+        else:
+            accum = {k: np.concatenate([accum[k], out[k]]) for k in accum}
+        if store is not None and digest is not None:
+            store.save_partial(digest, c + 1, accum, chunk)
+
+    return {k: v[:num_runs] for k, v in accum.items()}
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+
+
+def run_batch(key, cfg: SwarmConfig, strategy, n: int, num_runs: int, *,
+              backend: str = "vmap", chunk_size: int = DEFAULT_CHUNK):
+    """Run ``num_runs`` Monte-Carlo simulations of ``(cfg, strategy, n)``.
+
+    Returns a dict of ``[num_runs]`` metric arrays (see ``summarize``),
+    bit-identical across backends.  ``swarm.run_many`` is a thin wrapper
+    over the ``vmap`` backend of this function.
+    """
+    if backend == "vmap":
+        return _vmap_call(key, cfg, strategy, n, num_runs)
+    if backend == "sharded":
+        return _run_sharded(key, cfg, strategy, n, num_runs)
+    if backend == "streaming":
+        return {k: jnp.asarray(v) for k, v in _run_streaming(
+            key, cfg, strategy, n, num_runs, chunk_size).items()}
+    raise ValueError(f"unknown backend {backend!r}; one of {BACKENDS}")
+
+
+def run_point(point: SweepPoint, *, backend: str = "vmap",
+              store: Optional[ResultStore] = None,
+              chunk_size: int = DEFAULT_CHUNK,
+              max_chunks: Optional[int] = None) -> Dict[str, np.ndarray]:
+    """Execute one sweep point, consulting/filling ``store`` if given."""
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; one of {BACKENDS}")
+    digest = point_digest(point) if store is not None else None
+    if store is not None:
+        hit = store.get(digest)
+        if hit is not None:
+            return hit
+    key = jax.random.PRNGKey(point.seed)
+    if backend == "streaming":
+        metrics = _run_streaming(key, point.cfg, jnp.int32(point.strategy),
+                                 point.n, point.num_runs, chunk_size,
+                                 store=store, digest=digest,
+                                 max_chunks=max_chunks)
+    else:
+        out = run_batch(key, point.cfg, jnp.int32(point.strategy), point.n,
+                        point.num_runs, backend=backend)
+        metrics = {k: np.asarray(v) for k, v in out.items()}
+    if store is not None:
+        store.put(digest, metrics, meta={
+            "label": point.label, "backend": backend,
+            "code_version": code_version()})
+    return metrics
+
+
+def execute(spec: SweepSpec, *, backend: str = "vmap",
+            store: Optional[ResultStore] = None,
+            chunk_size: int = DEFAULT_CHUNK,
+            verbose: bool = False) -> Dict[str, Dict[str, np.ndarray]]:
+    """Expand and run a whole sweep; returns ``{point.label: metrics}``.
+
+    Each point's wall time (including any cache hit) is recorded under the
+    ``"_wall_s"`` pseudo-metric, matching the historical ``timed_sweep``
+    convention the benchmark CSVs rely on.
+    """
+    out = {}
+    for pt in spec.expand():
+        t0 = time.perf_counter()
+        m = dict(run_point(pt, backend=backend, store=store,
+                           chunk_size=chunk_size))
+        m["_wall_s"] = time.perf_counter() - t0
+        if verbose:
+            print(f"[fleet:{spec.name}] {pt.label} "
+                  f"({m['_wall_s']:.2f}s, backend={backend})")
+        out[pt.label] = m
+    return out

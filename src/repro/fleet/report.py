@@ -1,0 +1,86 @@
+"""Sweep-result aggregation into the paper's performance indices
+(DESIGN.md §8.4) and the ``BENCH_fleet.json`` emitter.
+
+``point_indices`` turns one point's per-run metric arrays into the summary
+the paper reports: mean ± 95 % CI per metric, the latency CDF quantiles
+(Fig. 4a-style), Jain fairness and energy per task (J/task).
+``write_bench_json`` merges a named section into ``BENCH_fleet.json``
+atomically, so independent producers (figure sweeps, the φ microbench, CI
+smoke runs) accumulate into one machine-readable perf-trajectory file.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, Mapping, Optional, Sequence
+
+import numpy as np
+
+LATENCY_QS = (0.05, 0.25, 0.5, 0.75, 0.9, 0.95, 0.99)
+BENCH_NAME = "BENCH_fleet.json"
+
+
+def ci95(x) -> tuple:
+    """(mean, 95 % CI half-width) of a 1-D sample (paper: 50 runs, 95 % CI)."""
+    x = np.asarray(x, np.float64)
+    m = x.mean()
+    half = 1.96 * x.std(ddof=1) / np.sqrt(len(x)) if len(x) > 1 else 0.0
+    return m, half
+
+
+def latency_cdf(lat_s, qs: Sequence[float] = LATENCY_QS) -> Dict[str, float]:
+    """Empirical per-run latency quantiles (seconds)."""
+    lat = np.asarray(lat_s, np.float64)
+    return {f"p{int(q * 100):02d}": float(np.quantile(lat, q)) for q in qs}
+
+
+def point_indices(metrics: Mapping[str, np.ndarray]) -> Dict:
+    """Paper performance indices for one sweep point's per-run metrics."""
+    out = {}
+    for k, v in metrics.items():
+        if k.startswith("_"):
+            continue     # wall-time etc.: not deterministic, keep out
+        mean, half = ci95(v)
+        out[k] = {"mean": float(mean), "ci95": float(half)}
+    if "avg_latency_s" in metrics:
+        out["latency_cdf_s"] = latency_cdf(metrics["avg_latency_s"])
+    for k in ("jain_fairness", "energy_per_task_j"):
+        if k in metrics:
+            out[k]["min"] = float(np.min(metrics[k]))
+            out[k]["max"] = float(np.max(metrics[k]))
+    return out
+
+
+def build_report(results: Mapping[str, Mapping[str, np.ndarray]],
+                 meta: Optional[Dict] = None) -> Dict:
+    """``{point label: metrics}`` (executor output) → JSON-ready section."""
+    return {
+        "meta": dict(meta or {}),
+        "points": {label: point_indices(m) for label, m in results.items()},
+    }
+
+
+def load_bench_json(path: str) -> Dict:
+    if not os.path.exists(path):
+        return {}
+    with open(path) as f:
+        return json.load(f)
+
+
+def write_bench_json(path: str, section: str, payload) -> str:
+    """Merge ``payload`` under ``doc[section]`` and rewrite atomically.
+
+    Re-running one producer never perturbs the other sections, and the
+    output is deterministic in the inputs (no timestamps) — an interrupted-
+    then-resumed sweep emits a byte-identical file to an uninterrupted one.
+    """
+    doc = load_bench_json(path)
+    doc[section] = payload
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+    os.replace(tmp, path)
+    return path

@@ -1,0 +1,177 @@
+"""Content-addressed sweep-result store with resumable checkpoints
+(DESIGN.md §8.3).
+
+A sweep point is addressed by the SHA-256 of everything that determines its
+numbers: the full ``SwarmConfig``, strategy, swarm size, Monte-Carlo run
+count, seed, and a git-describable code version.  Because the executor
+backends are bit-identical (tested), the digest deliberately excludes the
+backend — a result computed by the streaming path on one host is a valid
+cache hit for a ``vmap`` re-run on another.
+
+Layout under the store root::
+
+    <root>/<digest[:2]>/<digest>/result.json    # final (atomic rename)
+    <root>/<digest[:2]>/<digest>/partial/       # repro.checkpoint chunk dir
+
+``result.json`` stores per-run float32 metrics as JSON floats; float32 →
+float64 → decimal → float32 round-trips exactly, so a cache hit reproduces
+the computed arrays bit-for-bit.  Partial progress from the streaming
+backend goes through ``repro.checkpoint.ckpt`` (atomic ``step_<k>`` dirs):
+a sweep killed mid-point resumes at the last completed chunk and, because
+per-run results are bitwise stable, yields the same ``BENCH_fleet.json`` as
+an uninterrupted run (tested in ``tests/test_fleet.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import hashlib
+import json
+import os
+import shutil
+import subprocess
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.fleet.sweep import SweepPoint
+
+
+def _git(args, cwd, text=True):
+    out = subprocess.run(["git"] + args, cwd=cwd, capture_output=True,
+                         text=text, timeout=30)
+    if out.returncode != 0:
+        raise RuntimeError(f"git {args[0]} failed: {out.stderr}")
+    return out.stdout
+
+
+def _dirty_digest(cwd: str) -> str:
+    """Content hash of everything uncommitted: the tracked diff plus each
+    untracked (non-ignored) file.  A bare ``--dirty`` suffix would alias
+    *every* dirty tree to one cache version and serve stale results across
+    uncommitted edits."""
+    h = hashlib.sha256(_git(["diff", "HEAD"], cwd, text=False))
+    for rel in _git(["ls-files", "--others", "--exclude-standard"],
+                    cwd).splitlines():
+        h.update(rel.encode())
+        path = os.path.join(cwd, rel)
+        if os.path.isfile(path):
+            with open(path, "rb") as f:
+                h.update(f.read())
+    return h.hexdigest()[:12]
+
+
+@functools.lru_cache(maxsize=1)
+def code_version() -> str:
+    """Git-describable code version for cache keys.
+
+    ``REPRO_CODE_VERSION`` overrides (hermetic builds / tests); falls back
+    to ``git describe --always --dirty`` at this file's repo — with the
+    ``-dirty`` suffix refined by a content hash of the uncommitted changes,
+    so editing the code always moves the cache key — then to ``"unknown"``
+    outside a git checkout (deployments without git should pin
+    ``REPRO_CODE_VERSION`` to a build id, or stale hits become possible).
+    """
+    env = os.environ.get("REPRO_CODE_VERSION")
+    if env:
+        return env
+    cwd = os.path.dirname(os.path.abspath(__file__))
+    try:
+        desc = _git(["describe", "--always", "--dirty"], cwd).strip()
+        if desc.endswith("-dirty"):
+            desc += "." + _dirty_digest(cwd)
+        return desc or "unknown"
+    except (OSError, RuntimeError, subprocess.SubprocessError):
+        return "unknown"
+
+
+def point_digest(point: SweepPoint, version: Optional[str] = None) -> str:
+    """Content address of a sweep point's result."""
+    payload = {
+        "cfg": dataclasses.asdict(point.cfg),
+        "strategy": int(point.strategy),
+        "n": int(point.n),
+        "num_runs": int(point.num_runs),
+        "seed": int(point.seed),
+        "code_version": version if version is not None else code_version(),
+    }
+    blob = json.dumps(payload, sort_keys=True).encode()
+    return hashlib.sha256(blob).hexdigest()
+
+
+class ResultStore:
+    """Digest-keyed result cache + per-chunk resume state for one store root."""
+
+    def __init__(self, root: str):
+        self.root = root
+
+    def _dir(self, digest: str) -> str:
+        return os.path.join(self.root, digest[:2], digest)
+
+    def _partial_dir(self, digest: str) -> str:
+        return os.path.join(self._dir(digest), "partial")
+
+    # ---- final results ---------------------------------------------------
+
+    def get(self, digest: str) -> Optional[Dict[str, np.ndarray]]:
+        path = os.path.join(self._dir(digest), "result.json")
+        if not os.path.exists(path):
+            return None
+        with open(path) as f:
+            doc = json.load(f)
+        return {k: np.asarray(v, np.float32)
+                for k, v in doc["metrics"].items()}
+
+    def put(self, digest: str, metrics: Dict[str, np.ndarray],
+            meta: Optional[Dict] = None) -> str:
+        d = self._dir(digest)
+        os.makedirs(d, exist_ok=True)
+        doc = {
+            "meta": meta or {},
+            "metrics": {k: [float(x) for x in np.asarray(v).ravel()]
+                        for k, v in metrics.items()},
+        }
+        tmp = os.path.join(d, "result.json.tmp")
+        with open(tmp, "w") as f:
+            json.dump(doc, f)
+        os.replace(tmp, os.path.join(d, "result.json"))
+        self.clear_partial(digest)
+        return os.path.join(d, "result.json")
+
+    # ---- streaming-resume chunk checkpoints ------------------------------
+
+    def save_partial(self, digest: str, chunks_done: int,
+                     accum: Dict[str, np.ndarray],
+                     chunk_size: int) -> None:
+        """Checkpoint the first ``chunks_done`` chunks' per-run metrics."""
+        ckpt.save(self._partial_dir(digest), chunks_done, dict(accum),
+                  keep=1, extra={"metrics": sorted(accum),
+                                 "chunk_size": int(chunk_size)})
+
+    def load_partial(self, digest: str, chunk_size: Optional[int] = None
+                     ) -> Tuple[int, Optional[Dict[str, np.ndarray]]]:
+        """Returns (chunks_done, accum) of the newest partial checkpoint,
+        or (0, None) when there is nothing to resume.
+
+        ``chunks_done`` only indexes runs together with the chunk size it
+        was written under — with ``chunk_size`` given, a partial written
+        under a *different* chunking is discarded (resuming it would skip
+        or duplicate Monte-Carlo runs) and the sweep restarts cleanly.
+        """
+        d = self._partial_dir(digest)
+        step = ckpt.latest_step(d)
+        if step is None:
+            return 0, None
+        with open(os.path.join(d, f"step_{step:08d}",
+                               "manifest.json")) as f:
+            extra = json.load(f)["extra"]
+        if chunk_size is not None and extra.get("chunk_size") != chunk_size:
+            self.clear_partial(digest)
+            return 0, None
+        like = {k: 0 for k in extra["metrics"]}
+        tree, _ = ckpt.restore(d, like, step=step)
+        return step, {k: np.asarray(v) for k, v in tree.items()}
+
+    def clear_partial(self, digest: str) -> None:
+        shutil.rmtree(self._partial_dir(digest), ignore_errors=True)

@@ -55,16 +55,68 @@ def free_space(key, dist_m: jax.Array, cfg: SwarmConfig) -> jax.Array:
     return 20.0 * jnp.log10(d) + _fspl_1m_db(cfg)
 
 
+def _log_distance_db(dist_m: jax.Array, cfg: SwarmConfig) -> jax.Array:
+    """Log-distance pathloss baseline shared by the stochastic models:
+    PL(dB) = FSPL(1 m) + 10·n·log10(d)."""
+    d = jnp.maximum(dist_m, 1.0)
+    return _fspl_1m_db(cfg) + 10.0 * cfg.pathloss_exp * jnp.log10(d)
+
+
+def _mirror_gain(g: jax.Array) -> jax.Array:
+    """Symmetrize a per-link power-gain draw: upper triangle mirrored, unit
+    gain on the diagonal (the diagonal is masked out of adjacency anyway,
+    but keeping it deterministic preserves the key-invariant-diagonal
+    contract the shadowing tests rely on)."""
+    n = g.shape[-1]
+    u = jnp.triu(g, 1)
+    return u + jnp.swapaxes(u, -1, -2) + jnp.eye(n, dtype=g.dtype)
+
+
 def log_normal(key, dist_m: jax.Array, cfg: SwarmConfig) -> jax.Array:
     """Log-distance pathloss with log-normal shadowing:
     PL(dB) = FSPL(1 m) + 10·n·log10(d) + X,  X ~ N(0, σ²) symmetric per
     link (drawn on the upper triangle, mirrored)."""
-    d = jnp.maximum(dist_m, 1.0)
-    base = _fspl_1m_db(cfg) + 10.0 * cfg.pathloss_exp * jnp.log10(d)
+    base = _log_distance_db(dist_m, cfg)
     n = dist_m.shape[-1]
     z = jax.random.normal(key, (n, n), jnp.float32) * cfg.shadowing_sigma_db
     upper = jnp.triu(z, 1)
     return base + upper + upper.T
+
+
+def rician(key, dist_m: jax.Array, cfg: SwarmConfig) -> jax.Array:
+    """Log-distance pathloss under Rician small-scale fading (strong LoS —
+    the typical UAV-to-UAV air corridor).
+
+    Per-link complex channel h = √(K/(K+1)) + √(1/(K+1))·CN(0, 1) with
+    linear K-factor from ``rician_k_db``; E[|h|²] = 1, so the fading only
+    redistributes SNR around the log-distance baseline:
+    PL(dB) = base - 10·log10(|h|²), symmetric per link (upper triangle
+    mirrored), redrawn each epoch.
+    """
+    base = _log_distance_db(dist_m, cfg)
+    n = dist_m.shape[-1]
+    K = jnp.power(10.0, cfg.rician_k_db / 10.0)
+    kx, ky = jax.random.split(key)
+    s = jnp.sqrt(1.0 / (2.0 * (K + 1.0)))
+    x = jnp.sqrt(K / (K + 1.0)) + s * jax.random.normal(kx, (n, n),
+                                                        jnp.float32)
+    y = s * jax.random.normal(ky, (n, n), jnp.float32)
+    g = _mirror_gain(x * x + y * y)
+    return base - 10.0 * jnp.log10(jnp.maximum(g, 1e-12))
+
+
+def nakagami(key, dist_m: jax.Array, cfg: SwarmConfig) -> jax.Array:
+    """Log-distance pathloss under Nakagami-m fading (generalized envelope:
+    m = 1 is Rayleigh, m → ∞ approaches the deterministic baseline).
+
+    The power gain is Gamma(m, 1/m) (unit mean); PL(dB) = base -
+    10·log10(g), symmetric per link, redrawn each epoch.
+    """
+    base = _log_distance_db(dist_m, cfg)
+    n = dist_m.shape[-1]
+    m = jnp.float32(cfg.nakagami_m)
+    g = _mirror_gain(jax.random.gamma(key, m, (n, n), jnp.float32) / m)
+    return base - 10.0 * jnp.log10(jnp.maximum(g, 1e-12))
 
 
 # ---------------------------------------------------------------------------

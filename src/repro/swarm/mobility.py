@@ -17,6 +17,9 @@ trajectories are bit-identical to the pre-engine simulator.
   speed ~ U[speed_min, speed_max], re-draw on arrival.
 * **gauss_markov**: velocity AR(1) with memory ``gm_alpha`` around a random
   per-node mean heading; reflecting area boundaries.
+* **levy_flight**: heavy-tailed (Pareto) hop lengths with uniform headings —
+  the search-flight pattern UAV surveillance missions exhibit; reflecting
+  area boundaries like random_waypoint.
 """
 from __future__ import annotations
 
@@ -92,6 +95,44 @@ def step_random_waypoint(state, key, cfg: SwarmConfig, t0):
                                          cfg.speed_max_mps),
                       state["speed"])
     return {"pos": pos, "wp": wp, "speed": speed}, pos
+
+
+# ---------------------------------------------------------------------------
+# Lévy flight
+# ---------------------------------------------------------------------------
+
+
+def init_levy_flight(key, cfg: SwarmConfig, n: int):
+    pos = jax.random.uniform(key, (n, 2), jnp.float32, 0.0, cfg.area_m)
+    return {"pos": pos}
+
+
+def step_levy_flight(state, key, cfg: SwarmConfig, t0):
+    """One epoch of a bounded Lévy flight.
+
+    Hop length per epoch is Pareto-tailed: L = L_min · u^(-1/α) with
+    α = ``levy_alpha`` (1 < α < 3 gives the characteristic many-small-hops /
+    rare-long-relocations mix), truncated so one epoch never exceeds
+    ``speed_max_mps`` — the same physical speed cap random_waypoint obeys.
+    Heading is uniform per epoch; boundary hits reflect back into the arena.
+    """
+    n = state["pos"].shape[0]
+    dt = cfg.decision_period_s
+    kl, kh = jax.random.split(key)
+    l_min = cfg.speed_min_mps * dt
+    l_max = cfg.speed_max_mps * dt
+    u = jax.random.uniform(kl, (n,), jnp.float32, 1e-6, 1.0)
+    hop = jnp.minimum(l_min * jnp.power(u, -1.0 / cfg.levy_alpha), l_max)
+    theta = jax.random.uniform(kh, (n,), jnp.float32, 0.0, 2.0 * jnp.pi)
+    step = hop[:, None] * jnp.stack([jnp.cos(theta), jnp.sin(theta)],
+                                    axis=-1)
+    # epoch-start contract: the first epoch (t0 = 0) observes init placement
+    pos = state["pos"] + jnp.where(t0 > 0.0, 1.0, 0.0) * step
+    A = cfg.area_m
+    pos = jnp.clip(jnp.where(pos < 0.0, -pos,
+                             jnp.where(pos > A, 2.0 * A - pos, pos)),
+                   0.0, A)
+    return {"pos": pos}, pos
 
 
 # ---------------------------------------------------------------------------

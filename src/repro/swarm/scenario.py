@@ -158,10 +158,14 @@ register_mobility("random_waypoint", _mobility.init_random_waypoint,
                   _mobility.step_random_waypoint)
 register_mobility("gauss_markov", _mobility.init_gauss_markov,
                   _mobility.step_gauss_markov)
+register_mobility("levy_flight", _mobility.init_levy_flight,
+                  _mobility.step_levy_flight)
 
 register_channel("two_ray", _channel.two_ray)
 register_channel("free_space", _channel.free_space)
 register_channel("log_normal", _channel.log_normal)
+register_channel("rician", _channel.rician)
+register_channel("nakagami", _channel.nakagami)
 
 register_fault("none", _fault_none_init, _fault_none_step)
 register_fault("markov", _fault_markov_init, _fault_markov_step)

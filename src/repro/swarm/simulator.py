@@ -21,7 +21,6 @@ scenarios costs one compile per (cfg, n) pair and zero code edits.
 """
 from __future__ import annotations
 
-import functools
 from typing import Dict
 
 import jax
@@ -317,8 +316,14 @@ def summarize(st, cfg: SwarmConfig, profile: TaskProfile) -> Dict:
     }
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "n", "num_runs"))
 def run_many(key, cfg: SwarmConfig, strategy, n: int, num_runs: int) -> Dict:
-    """vmap over Monte-Carlo runs; returns dict of [num_runs] arrays."""
-    keys = jax.random.split(key, num_runs)
-    return jax.vmap(lambda k: run_sim(k, cfg, strategy, n))(keys)
+    """vmap over Monte-Carlo runs; returns dict of [num_runs] arrays.
+
+    Routed through ``repro.fleet.executor`` (the ``vmap`` backend is the
+    historical jitted-vmap path, bit-identical), so the simulator and the
+    fleet sweep engine share one batching implementation.  For multi-device
+    or memory-bounded batching call ``fleet.run_batch`` with
+    ``backend="sharded"`` / ``"streaming"`` instead.
+    """
+    from repro.fleet.executor import run_batch  # deferred: no import cycle
+    return run_batch(key, cfg, strategy, n, num_runs, backend="vmap")

@@ -1,0 +1,227 @@
+"""Fleet sweep-engine tests (DESIGN.md §8): grid expansion, cross-backend
+bit-for-bit equivalence, content-addressed caching, and kill/resume
+determinism of the streaming backend.
+
+The CI fleet smoke job runs this file under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` so the sharded
+backend exercises a real 8-device mesh; the tests themselves are
+device-count agnostic (the mesh spans whatever is available).
+"""
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SwarmConfig
+from repro.fleet import (SweepInterrupted, SweepSpec, ResultStore,
+                         build_report, execute, point_digest, run_batch,
+                         run_point, write_bench_json)
+from repro.swarm import DISTRIBUTED, LOCAL_ONLY, run_many
+
+KEY = jax.random.PRNGKey(0)
+CFG = dataclasses.replace(SwarmConfig(), sim_time_s=2.0, num_workers=8)
+N, RUNS = 8, 6
+
+
+@pytest.fixture(autouse=True)
+def _pinned_code_version(monkeypatch):
+    """Digests must not drift with the working tree while tests run."""
+    monkeypatch.setenv("REPRO_CODE_VERSION", "test-version")
+
+
+@pytest.fixture(scope="module")
+def vmap_metrics():
+    out = run_batch(KEY, CFG, jnp.int32(DISTRIBUTED), N, RUNS,
+                    backend="vmap")
+    return {k: np.asarray(v) for k, v in out.items()}
+
+
+def _np(tree):
+    return {k: np.asarray(v) for k, v in tree.items()}
+
+
+# ---------------------------------------------------------------------------
+# sweep expansion
+# ---------------------------------------------------------------------------
+
+
+def test_sweep_expands_full_grid_with_unique_labels_and_digests():
+    spec = SweepSpec.build(
+        "grid", CFG,
+        axes={"gamma": (0.02, 0.1),
+              "scenario": (("base", {}),
+                           ("rwp", {"mobility_model": "random_waypoint"}))},
+        strategies=(LOCAL_ONLY, DISTRIBUTED), num_runs=3)
+    pts = spec.expand()
+    assert len(pts) == len(spec) == 2 * 2 * 2
+    labels = [p.label for p in pts]
+    assert len(set(labels)) == len(labels)
+    digests = {point_digest(p) for p in pts}
+    # the two scenario cells of equal gamma/strategy differ only via
+    # overrides — digests must still all be distinct
+    assert len(digests) == len(pts)
+    rwp = [p for p in pts if p.values["scenario"] == "rwp"]
+    assert all(p.cfg.mobility_model == "random_waypoint" for p in rwp)
+    assert all(p.n == CFG.num_workers for p in pts)
+
+
+def test_sweep_rejects_unknown_fields():
+    with pytest.raises(ValueError, match="not a SwarmConfig field"):
+        SweepSpec.build("bad", CFG, axes={"gama": (0.1,)}).expand()
+    with pytest.raises(ValueError, match="unknown SwarmConfig fields"):
+        SweepSpec.build("bad", CFG, axes={
+            "scenario": (("x", {"mobility": "rwp"}),)}).expand()
+
+
+# ---------------------------------------------------------------------------
+# cross-backend equivalence (acceptance: identical summary metrics)
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_backend_bit_identical_to_vmap(vmap_metrics):
+    got = _np(run_batch(KEY, CFG, jnp.int32(DISTRIBUTED), N, RUNS,
+                        backend="sharded"))
+    assert set(got) == set(vmap_metrics)
+    for k in got:
+        np.testing.assert_array_equal(got[k], vmap_metrics[k], err_msg=k)
+
+
+def test_streaming_backend_bit_identical_to_vmap(vmap_metrics):
+    # chunk_size=4 over 6 runs: exercises the padded final chunk
+    got = _np(run_batch(KEY, CFG, jnp.int32(DISTRIBUTED), N, RUNS,
+                        backend="streaming", chunk_size=4))
+    for k in got:
+        np.testing.assert_array_equal(got[k], vmap_metrics[k], err_msg=k)
+
+
+def test_sharded_pads_non_divisible_run_counts(vmap_metrics):
+    if len(jax.devices()) == 1:
+        pytest.skip("padding is a no-op on a single device")
+    runs = len(jax.devices()) + 1
+    got = _np(run_batch(KEY, CFG, jnp.int32(DISTRIBUTED), N, runs,
+                        backend="sharded"))
+    ref = _np(run_batch(KEY, CFG, jnp.int32(DISTRIBUTED), N, runs,
+                        backend="vmap"))
+    for k in got:
+        np.testing.assert_array_equal(got[k], ref[k], err_msg=k)
+
+
+def test_run_many_routes_through_executor(vmap_metrics):
+    got = _np(run_many(KEY, CFG, jnp.int32(DISTRIBUTED), N, RUNS))
+    for k in got:
+        np.testing.assert_array_equal(got[k], vmap_metrics[k], err_msg=k)
+
+
+def test_unknown_backend_raises():
+    with pytest.raises(ValueError, match="unknown backend"):
+        run_batch(KEY, CFG, jnp.int32(0), N, 2, backend="pmap")
+
+
+# ---------------------------------------------------------------------------
+# store: content addressing + cache hits
+# ---------------------------------------------------------------------------
+
+
+def test_store_roundtrip_is_bitwise(tmp_path):
+    spec = SweepSpec.build("cache", CFG, strategies=(DISTRIBUTED,),
+                           num_runs=RUNS)
+    (pt,) = spec.expand()
+    store = ResultStore(str(tmp_path))
+    first = run_point(pt, backend="vmap", store=store)
+    digest = point_digest(pt)
+    assert store.get(digest) is not None
+    hit = run_point(pt, backend="vmap", store=store)
+    for k in first:
+        np.testing.assert_array_equal(hit[k], first[k], err_msg=k)
+    # a result computed on one backend is a valid hit for another
+    hit2 = run_point(pt, backend="streaming", store=store, chunk_size=2)
+    for k in first:
+        np.testing.assert_array_equal(hit2[k], first[k], err_msg=k)
+
+
+def test_digest_covers_config_and_code_version(monkeypatch):
+    spec = SweepSpec.build("d", CFG, strategies=(DISTRIBUTED,), num_runs=2)
+    (pt,) = spec.expand()
+    base = point_digest(pt)
+    assert point_digest(pt._replace(
+        cfg=dataclasses.replace(CFG, gamma=0.5))) != base
+    assert point_digest(pt._replace(seed=1)) != base
+    assert point_digest(pt._replace(num_runs=3)) != base
+    assert point_digest(pt, version="other") != base
+    assert point_digest(pt) == base     # and it is deterministic
+
+
+# ---------------------------------------------------------------------------
+# kill/resume (acceptance: resumed == uninterrupted, down to BENCH json)
+# ---------------------------------------------------------------------------
+
+
+def test_killed_and_resumed_sweep_matches_uninterrupted(tmp_path):
+    spec = SweepSpec.build("resume", CFG, axes={"gamma": (0.02, 0.1)},
+                           strategies=(DISTRIBUTED,), num_runs=RUNS)
+    store = ResultStore(str(tmp_path / "cache"))
+
+    # kill after 1 of 3 chunks of the first point
+    with pytest.raises(SweepInterrupted):
+        for pt in spec.expand():
+            run_point(pt, backend="streaming", store=store, chunk_size=2,
+                      max_chunks=1)
+    # partial progress was checkpointed
+    done, accum = store.load_partial(point_digest(spec.expand()[0]))
+    assert done == 1 and accum is not None
+    assert next(iter(accum.values())).shape == (2,)
+
+    # resume to completion, then compare against a storeless fresh run
+    resumed = execute(spec, backend="streaming", store=store, chunk_size=2)
+    fresh = execute(spec, backend="streaming", chunk_size=2)
+    for label in fresh:
+        for k in fresh[label]:
+            if k.startswith("_"):
+                continue
+            np.testing.assert_array_equal(resumed[label][k],
+                                          fresh[label][k],
+                                          err_msg=f"{label}/{k}")
+
+    # ... and the emitted BENCH_fleet.json files are byte-identical
+    p_resumed = str(tmp_path / "bench_resumed.json")
+    p_fresh = str(tmp_path / "bench_fresh.json")
+    write_bench_json(p_resumed, "sweep:resume", build_report(resumed))
+    write_bench_json(p_fresh, "sweep:resume", build_report(fresh))
+    with open(p_resumed) as f1, open(p_fresh) as f2:
+        assert f1.read() == f2.read()
+
+
+def test_resume_with_different_chunk_size_discards_stale_partial(tmp_path):
+    """chunks_done only indexes runs together with its chunk size: resuming
+    under a different chunking must restart cleanly, not skip/duplicate
+    Monte-Carlo runs."""
+    spec = SweepSpec.build("rechunk", CFG, strategies=(DISTRIBUTED,),
+                           num_runs=RUNS)
+    (pt,) = spec.expand()
+    store = ResultStore(str(tmp_path))
+    with pytest.raises(SweepInterrupted):
+        run_point(pt, backend="streaming", store=store, chunk_size=2,
+                  max_chunks=1)
+    # the size-2 partial is unusable at size 3 and must be dropped
+    done, _ = store.load_partial(point_digest(pt), chunk_size=3)
+    assert done == 0
+    resumed = run_point(pt, backend="streaming", store=store, chunk_size=3)
+    ref = _np(run_batch(KEY, CFG, jnp.int32(DISTRIBUTED), N, RUNS,
+                        backend="vmap"))
+    for k in ref:
+        np.testing.assert_array_equal(resumed[k], ref[k], err_msg=k)
+
+
+def test_bench_json_sections_merge(tmp_path):
+    path = str(tmp_path / "bench.json")
+    write_bench_json(path, "a", {"x": 1})
+    write_bench_json(path, "b", {"y": 2})
+    write_bench_json(path, "a", {"x": 3})
+    with open(path) as f:
+        doc = json.load(f)
+    assert doc == {"a": {"x": 3}, "b": {"y": 2}}
+    assert os.path.exists(path) and not os.path.exists(path + ".tmp")

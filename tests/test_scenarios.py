@@ -27,8 +27,9 @@ N = 12
 
 def test_registry_roundtrip():
     assert set(MOBILITY_MODELS) == {"circular", "random_waypoint",
-                                    "gauss_markov"}
-    assert set(CHANNEL_MODELS) == {"two_ray", "free_space", "log_normal"}
+                                    "gauss_markov", "levy_flight"}
+    assert set(CHANNEL_MODELS) == {"two_ray", "free_space", "log_normal",
+                                   "rician", "nakagami"}
     assert set(FAULT_MODELS) == {"none", "markov"}
     for name in MOBILITY_MODELS:
         cfg = dataclasses.replace(SwarmConfig(), mobility_model=name)
@@ -42,10 +43,10 @@ def test_registry_roundtrip():
 
 
 def test_registry_unknown_key_raises_with_known_keys():
-    cfg = dataclasses.replace(SwarmConfig(), mobility_model="levy_flight")
+    cfg = dataclasses.replace(SwarmConfig(), mobility_model="brownian")
     with pytest.raises(KeyError, match="circular"):
         get_mobility(cfg)
-    cfg = dataclasses.replace(SwarmConfig(), channel_model="rician")
+    cfg = dataclasses.replace(SwarmConfig(), channel_model="weibull")
     with pytest.raises(KeyError, match="two_ray"):
         get_channel(cfg)
     cfg = dataclasses.replace(SwarmConfig(), fault_model="byzantine")
@@ -59,7 +60,7 @@ def test_registry_unknown_key_raises_with_known_keys():
 
 
 @pytest.mark.parametrize("name", ["circular", "random_waypoint",
-                                  "gauss_markov"])
+                                  "gauss_markov", "levy_flight"])
 def test_mobility_shapes_and_finiteness(name):
     cfg = dataclasses.replace(SwarmConfig(), mobility_model=name)
     model = get_mobility(cfg)
@@ -89,7 +90,8 @@ def test_random_waypoint_respects_speed_bound():
         prev = pos
 
 
-@pytest.mark.parametrize("name", ["random_waypoint", "gauss_markov"])
+@pytest.mark.parametrize("name", ["random_waypoint", "gauss_markov",
+                                  "levy_flight"])
 def test_stepped_mobility_epoch0_returns_initial_placement(name):
     """Epoch-start contract: the t0 = 0 step observes the init placement
     (no one-period phase offset vs the closed-form circular model)."""
@@ -107,7 +109,8 @@ def test_stepped_mobility_epoch0_returns_initial_placement(name):
 # ---------------------------------------------------------------------------
 
 
-@pytest.mark.parametrize("name", ["two_ray", "free_space", "log_normal"])
+@pytest.mark.parametrize("name", ["two_ray", "free_space", "log_normal",
+                                  "rician", "nakagami"])
 def test_channel_link_state_contract(name):
     cfg = dataclasses.replace(SwarmConfig(), channel_model=name)
     pos = jax.random.uniform(KEY, (N, 2), jnp.float32, 0.0, cfg.area_m)
@@ -129,9 +132,10 @@ def test_deterministic_pathloss_monotone_in_distance(name):
     assert np.all(np.diff(pl) > 0)
 
 
-def test_log_normal_shadowing_varies_with_key_but_not_baseline():
+@pytest.mark.parametrize("name", ["log_normal", "rician", "nakagami"])
+def test_stochastic_channel_varies_with_key_but_not_baseline(name):
     cfg = SwarmConfig()
-    fn = CHANNEL_MODELS["log_normal"]
+    fn = CHANNEL_MODELS[name]
     d = jnp.full((4, 4), 2_000.0)
     pl1 = np.asarray(fn(jax.random.PRNGKey(1), d, cfg))
     pl2 = np.asarray(fn(jax.random.PRNGKey(2), d, cfg))
@@ -139,6 +143,55 @@ def test_log_normal_shadowing_varies_with_key_but_not_baseline():
     assert not np.allclose(pl1[off], pl2[off])           # epoch redraw
     np.testing.assert_array_equal(np.diag(pl1), np.diag(pl2))
     np.testing.assert_allclose(pl1, pl1.T)               # symmetric links
+
+
+@pytest.mark.parametrize("name", ["rician", "nakagami"])
+def test_fading_gain_is_unit_mean_around_log_distance_baseline(name):
+    """Small-scale fading redistributes SNR but adds no systematic loss:
+    the mean linear power gain 10^((base - PL)/10) over many links is 1."""
+    cfg = SwarmConfig()
+    from repro.swarm.channel import _log_distance_db
+    n = 200
+    d = jnp.full((n, n), 2_000.0)
+    pl = np.asarray(CHANNEL_MODELS[name](KEY, d, cfg))
+    base = float(np.asarray(_log_distance_db(jnp.float32(2_000.0), cfg)))
+    g = 10.0 ** ((base - pl) / 10.0)
+    off = ~np.eye(n, dtype=bool)
+    assert abs(g[off].mean() - 1.0) < 0.05
+    assert g[off].std() > 0.05                           # it does fade
+
+
+def test_nakagami_concentrates_with_large_m():
+    """m → ∞ approaches the deterministic log-distance baseline."""
+    cfg_lo = dataclasses.replace(SwarmConfig(), nakagami_m=1.0)
+    cfg_hi = dataclasses.replace(SwarmConfig(), nakagami_m=64.0)
+    d = jnp.full((64, 64), 2_000.0)
+    fn = CHANNEL_MODELS["nakagami"]
+    off = ~np.eye(64, dtype=bool)
+    spread_lo = np.asarray(fn(KEY, d, cfg_lo))[off].std()
+    spread_hi = np.asarray(fn(KEY, d, cfg_hi))[off].std()
+    assert spread_hi < spread_lo / 3.0
+
+
+def test_levy_flight_bounded_and_speed_capped():
+    cfg = dataclasses.replace(SwarmConfig(), mobility_model="levy_flight")
+    model = get_mobility(cfg)
+    state = model.init(KEY, cfg, 64)
+    state, prev = model.step(state, KEY, cfg, jnp.float32(0.0))
+    hops = []
+    for i in range(1, 31):
+        state, pos = model.step(state, jax.random.fold_in(KEY, i), cfg,
+                                jnp.float32(i * cfg.decision_period_s))
+        assert bool(jnp.all((pos >= 0.0) & (pos <= cfg.area_m)))
+        hops.append(np.asarray(jnp.linalg.norm(pos - prev, axis=-1)))
+        prev = pos
+    hops = np.concatenate(hops)
+    cap = cfg.speed_max_mps * cfg.decision_period_s
+    assert np.all(hops <= cap + 1e-3)        # physical speed cap holds
+    assert np.any(hops > 0)                  # it does move
+    # heavy tail: long relocations (> half the cap) are rare but present
+    frac_long = float(np.mean(hops > 0.5 * cap))
+    assert 0.0 < frac_long < 0.5
 
 
 # ---------------------------------------------------------------------------

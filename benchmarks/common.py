@@ -9,7 +9,18 @@ aggregate indices into ``artifacts/BENCH_fleet.json``.  Env knobs:
   REPRO_FLEET_BACKEND=vmap|sharded|streaming   executor backend (default vmap)
   REPRO_FLEET_CACHE=<dir>   content-addressed result cache: re-runs are free,
                             interrupted streaming sweeps resume per chunk
+  REPRO_FLEET_WORKERS=N     dispatch points across N local worker processes
+                            (repro.fleet.dispatch; run.py --workers sets it)
+  REPRO_FLEET_LEASE_TTL=S   dispatch lease TTL in seconds (default 30; only
+                            a *dead* worker's lease expires — live workers
+                            heartbeat-renew — so this is the reclaim delay)
+  REPRO_FLEET_PROGRESS=<p>  progress.jsonl path (default artifacts/
+                            progress.jsonl; run.py --watch renders it)
   REPRO_FULL_RUNS=1         the paper's 50 Monte-Carlo runs (default 16)
+
+Multi-host mode: with the ``REPRO_FLEET_*`` rank/world env contract set
+(``fleet/dispatch.py``), every figure sweep runs as this rank's worker
+against the shared cache; only rank 0 records/returns results.
 """
 from __future__ import annotations
 
@@ -22,13 +33,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import SwarmConfig
-from repro.fleet import (ResultStore, SweepSpec, build_report, execute,
-                         write_bench_json)
+from repro.fleet import (ProgressWriter, ResultStore, SweepSpec,
+                         build_report, execute, publish_spec, run_sweep,
+                         worker_env, write_bench_json)
 from repro.fleet.report import ci95  # noqa: F401  (re-export: fig scripts)
 from repro.swarm import STRATEGY_NAMES, run_many
 
 ART = os.path.join(os.path.dirname(__file__), "artifacts")
 BENCH_JSON = os.path.join(ART, "BENCH_fleet.json")
+PROGRESS_JSONL = os.environ.get("REPRO_FLEET_PROGRESS",
+                                os.path.join(ART, "progress.jsonl"))
 
 # paper: 50 runs / 95% CI.  The bench default trades Monte-Carlo count for
 # wall time on this 1-core container; REPRO_FULL_RUNS=1 restores 50.
@@ -36,23 +50,48 @@ DEFAULT_RUNS = 50 if os.environ.get("REPRO_FULL_RUNS") == "1" else 16
 DEFAULT_BACKEND = os.environ.get("REPRO_FLEET_BACKEND", "vmap")
 
 
-def default_store() -> Optional[ResultStore]:
+def default_store(required: bool = False) -> Optional[ResultStore]:
+    """REPRO_FLEET_CACHE store; dispatch needs one (leases + results live
+    there), so ``required`` falls back to ``artifacts/fleet_cache``."""
     root = os.environ.get("REPRO_FLEET_CACHE")
+    if not root and required:
+        root = os.path.join(ART, "fleet_cache")
     return ResultStore(root) if root else None
+
+
+def default_workers() -> int:
+    return int(os.environ.get("REPRO_FLEET_WORKERS", "1"))
 
 
 def fleet_sweep(spec: SweepSpec, backend: Optional[str] = None,
                 store: Optional[ResultStore] = None,
-                record: bool = True) -> Dict[str, Dict]:
+                record: bool = True,
+                workers: Optional[int] = None) -> Dict[str, Dict]:
     """Execute a sweep through the fleet engine: ``{point label: metrics}``.
 
-    Backend/store default from the env knobs above; with ``record`` the
-    aggregated indices land in ``BENCH_fleet.json`` under
-    ``sweep:<spec.name>``.
+    Backend/store/workers default from the env knobs above; with ``record``
+    the aggregated indices land in ``BENCH_fleet.json`` under
+    ``sweep:<spec.name>``.  ``workers > 1`` (or the multi-host env
+    contract) routes through ``repro.fleet.dispatch`` — results are
+    byte-identical to the single-process path by construction.
     """
     backend = backend or DEFAULT_BACKEND
-    store = store if store is not None else default_store()
-    res = execute(spec, backend=backend, store=store)
+    workers = default_workers() if workers is None else workers
+    env = worker_env()
+    if workers > 1 or env.world > 1:
+        from repro.fleet.dispatch import DEFAULT_LEASE_TTL_S
+        store = store if store is not None else default_store(required=True)
+        publish_spec(spec, store)
+        res = run_sweep(spec, store, workers=workers, backend=backend,
+                        lease_ttl_s=float(os.environ.get(
+                            "REPRO_FLEET_LEASE_TTL", DEFAULT_LEASE_TTL_S)),
+                        progress_path=PROGRESS_JSONL)
+        if res is None:
+            return {}    # non-zero rank: computed its share, nothing to emit
+    else:
+        store = store if store is not None else default_store()
+        res = execute(spec, backend=backend, store=store,
+                      progress=ProgressWriter(PROGRESS_JSONL))
     if record:
         write_bench_json(
             BENCH_JSON, f"sweep:{spec.name}",

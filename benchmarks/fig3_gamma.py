@@ -15,6 +15,8 @@ def run(gammas=(0.002, 0.01, 0.02, 0.05, 0.1, 0.3), n=30, runs=DEFAULT_RUNS):
                            axes={"gamma": tuple(gammas)},
                            strategies=(DISTRIBUTED,), num_runs=runs)
     res = fleet_sweep(spec)
+    if not res:
+        return []    # non-zero rank of a multi-host dispatch: worker only
     rows = []
     for pt in spec.expand():
         m, g = res[pt.label], pt.values["gamma"]

@@ -22,6 +22,8 @@ def run(workers=(10, 20, 30, 40, 50), runs=DEFAULT_RUNS, sim_time=None):
                            axes={"num_workers": tuple(workers)},
                            strategies=tuple(range(5)), num_runs=runs)
     res = fleet_sweep(spec)
+    if not res:
+        return []    # non-zero rank of a multi-host dispatch: worker only
     rows = []
     for pt in spec.expand():
         m, n = res[pt.label], pt.values["num_workers"]

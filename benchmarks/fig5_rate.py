@@ -18,6 +18,8 @@ def run(periods_ms=(60, 70, 80, 90, 100), n=30, runs=DEFAULT_RUNS):
                                  for p in periods_ms)},
         strategies=tuple(range(5)), num_runs=runs)
     res = fleet_sweep(spec)
+    if not res:
+        return []    # non-zero rank of a multi-host dispatch: worker only
     rows = []
     for pt in spec.expand():
         m, p = res[pt.label], pt.values["period_ms"]

@@ -17,6 +17,8 @@ def run(areas_km=(10, 20, 30, 40), n=30, runs=DEFAULT_RUNS):
                                for a in areas_km)},
         strategies=(LOCAL_ONLY, DISTRIBUTED), num_runs=runs)
     res = fleet_sweep(spec)
+    if not res:
+        return []    # non-zero rank of a multi-host dispatch: worker only
     rows = []
     for pt in spec.expand():
         m, a = res[pt.label], pt.values["area_km"]

@@ -22,6 +22,8 @@ def run(workers=(10, 20, 30, 40, 50), runs=DEFAULT_RUNS):
                              ("on", {"early_exit_enabled": True}))},
         strategies=(DISTRIBUTED,), num_runs=runs)
     res = fleet_sweep(spec)
+    if not res:
+        return []    # non-zero rank of a multi-host dispatch: worker only
     rows = []
     for pt in spec.expand():
         m = res[pt.label]

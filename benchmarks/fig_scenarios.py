@@ -46,6 +46,8 @@ def run(scenarios=SCENARIOS, n=20, runs=DEFAULT_RUNS, sim_time=20.0):
         axes={"scenario": tuple((name, dict(ov)) for name, ov in scenarios)},
         strategies=tuple(range(5)), num_runs=runs)
     res = fleet_sweep(spec)
+    if not res:
+        return []    # non-zero rank of a multi-host dispatch: worker only
     rows = []
     for pt in spec.expand():
         m, name = res[pt.label], pt.values["scenario"]

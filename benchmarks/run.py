@@ -5,11 +5,21 @@ the figure reproductions (Fig. 3-7) and the roofline table from the dry-run
 artifacts.  Env knobs:
   REPRO_FULL_RUNS=1   use the paper's 50 Monte-Carlo runs (default 16)
   REPRO_BENCH_FAST=1  tiny sweep for CI smoke (2 runs)
+
+Flags:
+  --workers N   dispatch every fleet sweep across N local worker processes
+                (``repro.fleet.dispatch``; results byte-identical to N=1)
+  --watch [p]   don't run benchmarks: follow a progress.jsonl (default
+                ``artifacts/progress.jsonl``) and render completed/total,
+                points/min and ETA for the sweep currently running —
+                locally or on any host sharing the progress file.
 """
 from __future__ import annotations
 
+import argparse
 import os
 import sys
+import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir, "src"))
@@ -17,14 +27,37 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir, "src"))
 FAST = os.environ.get("REPRO_BENCH_FAST") == "1"
 
 
-def main() -> None:
+def watch(path: str, interval: float = 2.0) -> None:
+    """Render live sweep progress from a shared progress.jsonl."""
+    from repro.fleet import progress_summary, read_progress, render_progress
+    last = None
+    while True:
+        s = progress_summary(read_progress(path))
+        line = render_progress(s)
+        if line != last:
+            print(line, flush=True)
+            last = line
+        if s is not None and s["total"] > 0 and s["completed"] >= s["total"]:
+            return
+        time.sleep(interval)
+
+
+def run_benchmarks() -> None:
     from benchmarks import (fig3_gamma, fig4_workers, fig5_rate, fig6_area,
                             fig7_earlyexit, microbench, roofline)
+    from repro.fleet import worker_env
 
-    print("== microbench (name,us_per_call,derived) ==")
-    microbench.run()
-    print("\n== diffusive_phi at swarm scale (ref vs Pallas interpret) ==")
-    microbench.run_phi_sweep(ns=(256,) if FAST else (256, 1024, 4096))
+    # fleet sweeps coordinate across ranks through the shared store, but
+    # the microbench/roofline producers don't — running them on every rank
+    # would race the read-modify-write of BENCH_fleet.json and record an
+    # arbitrary rank's wall clock; rank 0 owns them
+    rank0 = worker_env().rank == 0
+    if rank0:
+        print("== microbench (name,us_per_call,derived) ==")
+        microbench.run()
+        print("\n== diffusive_phi at swarm scale (ref vs Pallas interpret)"
+              " ==")
+        microbench.run_phi_sweep(ns=(256,) if FAST else (256, 1024, 4096))
 
     kw = {"runs": 2} if FAST else {}
 
@@ -49,13 +82,36 @@ def main() -> None:
                       else fig_scenarios.SCENARIOS,
                       sim_time=10.0 if FAST else 20.0, **kw)
 
-    print("\n== Ablation (ours): arrival burstiness ==")
-    from benchmarks import ablation_burst
-    ablation_burst.run(duties=(0.25, 1.0) if FAST else (0.125, 0.25, 0.5,
-                                                        1.0), **kw)
+    if rank0:
+        print("\n== Ablation (ours): arrival burstiness ==")
+        from benchmarks import ablation_burst
+        ablation_burst.run(duties=(0.25, 1.0) if FAST else
+                           (0.125, 0.25, 0.5, 1.0), **kw)
 
-    print("\n== Roofline (from dry-run artifacts) ==")
-    roofline.run()
+        print("\n== Roofline (from dry-run artifacts) ==")
+        roofline.run()
+
+
+def main(argv=None) -> None:
+    from benchmarks.common import PROGRESS_JSONL
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--workers", type=int, default=None, metavar="N",
+                    help="dispatch fleet sweeps across N local worker "
+                         "processes (repro.fleet.dispatch)")
+    ap.add_argument("--watch", nargs="?", const=PROGRESS_JSONL, default=None,
+                    metavar="PROGRESS_JSONL",
+                    help="follow a progress file instead of running "
+                         f"benchmarks (default {PROGRESS_JSONL})")
+    args = ap.parse_args(argv)
+
+    if args.watch is not None:
+        watch(args.watch)
+        return
+    if args.workers is not None:
+        # common.fleet_sweep reads the knob at call time, so setting the
+        # env here covers every figure sweep below
+        os.environ["REPRO_FLEET_WORKERS"] = str(args.workers)
+    run_benchmarks()
 
 
 if __name__ == "__main__":

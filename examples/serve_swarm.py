@@ -8,8 +8,6 @@ mechanism driving real model execution.
 
     PYTHONPATH=src python examples/serve_swarm.py
 """
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -38,18 +36,22 @@ def main():
     eng = SplitServeEngine(cfg, params, plan, tau_med=0.5, tau_high=1.5)
     key = jax.random.PRNGKey(1)
 
+    # submit/step both use the engine's internal epoch clock (no t_now), so
+    # latency is measured in one clock domain and the run is deterministic
     def submit(n):
         nonlocal key
         for _ in range(n):
             key, k = jax.random.split(key)
             toks = jax.random.randint(k, (4, 32), 0, cfg.vocab_size)
-            eng.submit({"tokens": toks}, time.perf_counter())
+            eng.submit({"tokens": toks})
 
     # steady phase: requests trickle in, engine keeps up → full-depth exits
     print("\n-- steady phase --")
     for _ in range(8):
         submit(1)
-        eng.step()
+        done = eng.step()
+        for rid, logits in done:
+            print(f"  request {rid} done: logits {tuple(logits.shape)}")
     steady = dict(eng.stats.exit_counts)
 
     # burst phase: the event-triggered surge of Fig. 1 → early exits fire
@@ -57,12 +59,13 @@ def main():
     submit(24)
     stats = eng.drain()
     print(f"\nserved {stats.completed} sequences, "
-          f"avg latency {stats.avg_latency*1e3:.1f} ms")
+          f"avg latency {stats.avg_latency*1e3:.1f} epoch-ms, "
+          f"{len(eng.results)} logits tensors stashed")
     print("exit depth counts  0=full 1=medium 2=high:", stats.exit_counts)
     burst_exits = (stats.exit_counts[1] + stats.exit_counts[2]
                    - steady[1] - steady[2])
     print(f"early exits triggered by the burst: {burst_exits}")
-    assert stats.completed > 0
+    assert stats.completed > 0 and len(eng.results) == 8 + 24
 
 
 if __name__ == "__main__":

@@ -12,16 +12,24 @@ channel with node churn, Monte-Carlo axis sharded over host devices:
 
 ``--backend streaming`` caps memory at one swarm state per chunk (the
 N >= 1k regime); all backends are bit-identical (DESIGN.md §8).
+
+``--procs N`` goes one level up: the strategy sweep becomes a SweepSpec
+dispatched across N worker *processes* through ``repro.fleet.dispatch``
+(lease-file work stealing over a shared store, DESIGN.md §9) — same
+numbers, point axis parallel.
 """
 import argparse
 import dataclasses
+import os
+import tempfile
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import SwarmConfig
-from repro.fleet import BACKENDS, run_batch
+from repro.fleet import (BACKENDS, ResultStore, SweepSpec, dispatch,
+                         run_batch)
 from repro.swarm import STRATEGY_NAMES
 
 
@@ -45,6 +53,12 @@ def main():
                          "splits runs over devices, streaming bounds memory)")
     ap.add_argument("--chunk-size", type=int, default=8,
                     help="runs per chunk for --backend streaming")
+    ap.add_argument("--procs", type=int, default=1,
+                    help="dispatch the strategy sweep across this many "
+                         "worker processes (repro.fleet.dispatch)")
+    ap.add_argument("--store", default=None,
+                    help="shared store root for --procs > 1 "
+                         "(default: a temp dir)")
     from repro.swarm import CHANNEL_MODELS, FAULT_MODELS, MOBILITY_MODELS
     ap.add_argument("--mobility", default="circular",
                     choices=sorted(MOBILITY_MODELS))
@@ -60,9 +74,39 @@ def main():
                               channel_model=args.channel,
                               fault_model=args.fault)
     print(f"{args.workers} UAVs, {args.sim_time:.0f}s, {args.num_runs} runs "
-          f"(backend={args.backend}, {len(jax.devices())} device(s)), "
+          f"(backend={args.backend}, {len(jax.devices())} device(s), "
+          f"{args.procs} proc(s)), "
           "bursty Markov arrivals (60 ms mean), scenario="
           f"{args.mobility}/{args.channel}/fault:{args.fault}")
+
+    cfg_ee = dataclasses.replace(cfg, early_exit_enabled=True)
+
+    if args.procs > 1:
+        # two specs — the five plain strategies, then Distributed+EE (a
+        # different config) — dispatched over a shared store; workers
+        # claim points by lease and steal from dead peers
+        store = ResultStore(args.store or
+                            tempfile.mkdtemp(prefix="repro_fleet_"))
+        spec = SweepSpec.build(
+            "swarm_example", cfg, strategies=range(len(STRATEGY_NAMES)),
+            num_runs=args.num_runs)
+        res = dispatch(spec, store, workers=args.procs,
+                       backend=args.backend, chunk_size=args.chunk_size,
+                       progress_path=os.path.join(store.root,
+                                                  "progress.jsonl"))
+        spec_ee = SweepSpec.build("swarm_example_ee", cfg_ee,
+                                  strategies=(4,), num_runs=args.num_runs)
+        res_ee = dispatch(spec_ee, store, workers=args.procs,
+                          backend=args.backend, chunk_size=args.chunk_size)
+        print(f"\n(dispatched over {args.procs} processes, "
+              f"store={store.root})")
+        print("\nno early exit (paper Fig. 4 regime):")
+        for pt in spec.expand():
+            show(STRATEGY_NAMES[pt.strategy], res[pt.label])
+        print("\nDistributed + congestion-aware early exit (Fig. 7):")
+        (pt_ee,) = spec_ee.expand()
+        show("Distributed+EE", res_ee[pt_ee.label])
+        return
 
     def batch(cfg, s):
         m = run_batch(key, cfg, jnp.int32(s), args.workers, args.num_runs,
@@ -74,7 +118,6 @@ def main():
         show(name, batch(cfg, s))
 
     print("\nDistributed + congestion-aware early exit (Fig. 7):")
-    cfg_ee = dataclasses.replace(cfg, early_exit_enabled=True)
     show("Distributed+EE", batch(cfg_ee, 4))
 
 

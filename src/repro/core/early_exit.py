@@ -42,10 +42,16 @@ def exit_boundary_layers(label: jax.Array, exit_points: Tuple[int, int, int],
                          finalize_layers: int) -> jax.Array:
     """Total layers executed for a label: full L, or exit point + finalize.
 
-    exit_points = (L1, L2, L_full) per the paper's Table 2 ordering; label 1
-    (medium congestion) exits at L2's *shallower* boundary? No — the paper
-    truncates deeper under *less* congestion: medium → L2(=30)+3, high →
-    L1(=15)+3, full → 60.
+    ``exit_points = (L1, L2, L_full)`` in the paper's Table 2 ordering,
+    with truncation depth decreasing as congestion rises (defaults
+    L1=15, L2=30, L_full=60, finalize=3):
+
+        label 0 (no congestion)     → L_full      = 60 layers
+        label 1 (medium congestion) → L2 + 3      = 33 layers
+        label 2 (high congestion)   → L1 + 3      = 18 layers
+
+    Each truncated exit is capped at ``L_full`` so finalize layers can
+    never push past the full network.
     """
     L1, L2, L_full = exit_points
     med = jnp.minimum(L2 + finalize_layers, L_full)

@@ -1,9 +1,15 @@
-"""`repro.fleet` — sharded Monte-Carlo sweep engine (DESIGN.md §8).
+"""`repro.fleet` — sharded Monte-Carlo sweep engine (DESIGN.md §8-9).
 
 Declare a scenario grid as a :class:`SweepSpec`, execute it on any backend
 (``vmap`` / ``sharded`` / ``streaming`` — bit-identical), cache/resume
-through :class:`ResultStore`, aggregate with :mod:`repro.fleet.report`.
+through :class:`ResultStore`, aggregate with :mod:`repro.fleet.report`,
+and scale the point axis over processes/hosts with
+:mod:`repro.fleet.dispatch`.
 """
+from repro.fleet.dispatch import (ProgressWriter, WorkerEnv, collect,
+                                  dispatch, progress_summary, publish_spec,
+                                  read_progress, render_progress, run_sweep,
+                                  run_worker, spawn_workers, worker_env)
 from repro.fleet.executor import (BACKENDS, SweepInterrupted, execute,
                                   run_batch, run_point)
 from repro.fleet.report import (build_report, ci95, latency_cdf,
@@ -16,4 +22,8 @@ __all__ = ["SweepSpec", "SweepPoint", "BACKENDS", "SweepInterrupted",
            "execute", "run_batch", "run_point",
            "ResultStore", "point_digest", "code_version",
            "build_report", "point_indices", "latency_cdf", "ci95",
-           "load_bench_json", "write_bench_json"]
+           "load_bench_json", "write_bench_json",
+           "dispatch", "run_sweep", "run_worker", "spawn_workers",
+           "collect", "publish_spec", "worker_env", "WorkerEnv",
+           "ProgressWriter", "read_progress", "progress_summary",
+           "render_progress"]

@@ -193,15 +193,23 @@ def run_point(point: SweepPoint, *, backend: str = "vmap",
 def execute(spec: SweepSpec, *, backend: str = "vmap",
             store: Optional[ResultStore] = None,
             chunk_size: int = DEFAULT_CHUNK,
-            verbose: bool = False) -> Dict[str, Dict[str, np.ndarray]]:
+            verbose: bool = False,
+            progress=None) -> Dict[str, Dict[str, np.ndarray]]:
     """Expand and run a whole sweep; returns ``{point.label: metrics}``.
 
     Each point's wall time (including any cache hit) is recorded under the
     ``"_wall_s"`` pseudo-metric, matching the historical ``timed_sweep``
-    convention the benchmark CSVs rely on.
+    convention the benchmark CSVs rely on.  ``progress`` is an optional
+    ``ProgressWriter`` (``fleet/dispatch.py``): the single-process path
+    then emits the same ``progress.jsonl`` rows as a dispatched run, so
+    ``benchmarks/run.py --watch`` works either way.
     """
+    points = spec.expand()
+    if progress is not None:
+        progress.emit(event="sweep_start", sweep=spec.name,
+                      total=len(points), t=time.time())
     out = {}
-    for pt in spec.expand():
+    for pt in points:
         t0 = time.perf_counter()
         m = dict(run_point(pt, backend=backend, store=store,
                            chunk_size=chunk_size))
@@ -209,5 +217,11 @@ def execute(spec: SweepSpec, *, backend: str = "vmap",
         if verbose:
             print(f"[fleet:{spec.name}] {pt.label} "
                   f"({m['_wall_s']:.2f}s, backend={backend})")
+        if progress is not None:
+            progress.emit(event="point", label=pt.label,
+                          digest=point_digest(pt) if store is not None
+                          else None,
+                          worker="local", num_runs=pt.num_runs,
+                          wall_s=round(m["_wall_s"], 3), t=time.time())
         out[pt.label] = m
     return out

@@ -29,13 +29,22 @@ def ci95(x) -> tuple:
 
 
 def latency_cdf(lat_s, qs: Sequence[float] = LATENCY_QS) -> Dict[str, float]:
-    """Empirical per-run latency quantiles (seconds)."""
+    """Empirical latency quantiles (seconds) of a 1-D latency sample."""
     lat = np.asarray(lat_s, np.float64)
     return {f"p{int(q * 100):02d}": float(np.quantile(lat, q)) for q in qs}
 
 
-def point_indices(metrics: Mapping[str, np.ndarray]) -> Dict:
-    """Paper performance indices for one sweep point's per-run metrics."""
+def point_indices(metrics: Mapping[str, np.ndarray],
+                  per_task_latency_s=None) -> Dict:
+    """Paper performance indices for one sweep point's per-run metrics.
+
+    ``metrics["avg_latency_s"]`` holds one *mean* latency per Monte-Carlo
+    run, so its quantiles describe the distribution of run means — emitted
+    as ``run_mean_latency_quantiles_s`` (an earlier revision mislabeled
+    them ``latency_cdf_s``; Fig. 4a's CDF is per-*task*).  Pass the pooled
+    per-task latency sample as ``per_task_latency_s`` to also emit the true
+    ``task_latency_cdf_s``.
+    """
     out = {}
     for k, v in metrics.items():
         if k.startswith("_"):
@@ -43,7 +52,10 @@ def point_indices(metrics: Mapping[str, np.ndarray]) -> Dict:
         mean, half = ci95(v)
         out[k] = {"mean": float(mean), "ci95": float(half)}
     if "avg_latency_s" in metrics:
-        out["latency_cdf_s"] = latency_cdf(metrics["avg_latency_s"])
+        out["run_mean_latency_quantiles_s"] = latency_cdf(
+            metrics["avg_latency_s"])
+    if per_task_latency_s is not None and len(per_task_latency_s):
+        out["task_latency_cdf_s"] = latency_cdf(per_task_latency_s)
     for k in ("jain_fairness", "energy_per_task_j"):
         if k in metrics:
             out[k]["min"] = float(np.min(metrics[k]))
@@ -52,11 +64,20 @@ def point_indices(metrics: Mapping[str, np.ndarray]) -> Dict:
 
 
 def build_report(results: Mapping[str, Mapping[str, np.ndarray]],
-                 meta: Optional[Dict] = None) -> Dict:
-    """``{point label: metrics}`` (executor output) → JSON-ready section."""
+                 meta: Optional[Dict] = None,
+                 per_task_latency_s: Optional[Mapping] = None) -> Dict:
+    """``{point label: metrics}`` (executor output) → JSON-ready section.
+
+    ``per_task_latency_s`` optionally maps point labels to pooled per-task
+    latency samples (for the true Fig. 4a CDF); points without an entry
+    just omit ``task_latency_cdf_s``.  Output is deterministic in the
+    inputs either way.
+    """
+    lat = per_task_latency_s or {}
     return {
         "meta": dict(meta or {}),
-        "points": {label: point_indices(m) for label, m in results.items()},
+        "points": {label: point_indices(m, lat.get(label))
+                   for label, m in results.items()},
     }
 
 

@@ -30,6 +30,7 @@ import json
 import os
 import shutil
 import subprocess
+import time
 from typing import Dict, Optional, Tuple
 
 import numpy as np
@@ -112,7 +113,13 @@ class ResultStore:
     def _partial_dir(self, digest: str) -> str:
         return os.path.join(self._dir(digest), "partial")
 
+    def _lease_path(self, digest: str) -> str:
+        return os.path.join(self.root, "leases", digest + ".json")
+
     # ---- final results ---------------------------------------------------
+
+    def has(self, digest: str) -> bool:
+        return os.path.exists(os.path.join(self._dir(digest), "result.json"))
 
     def get(self, digest: str) -> Optional[Dict[str, np.ndarray]]:
         path = os.path.join(self._dir(digest), "result.json")
@@ -175,3 +182,81 @@ class ResultStore:
 
     def clear_partial(self, digest: str) -> None:
         shutil.rmtree(self._partial_dir(digest), ignore_errors=True)
+
+    # ---- point leases (fleet/dispatch.py work-stealing) ------------------
+    #
+    # A lease is an advisory exclusive claim on a point, held by one worker
+    # while it computes.  ``try_claim`` is an atomic create-exclusive of a
+    # JSON lease file; a lease whose deadline passed is *stealable*: any
+    # worker may remove it and re-claim, so points held by a killed worker
+    # return to the pool after ``ttl_s`` (the fleet-level analogue of the
+    # paper's fault-tolerant forwarding — stalled work resumes elsewhere).
+    #
+    # The unlink-then-create steal has a benign TOCTOU window (two stealers
+    # may both end up computing the point): leases only need *liveness*,
+    # not mutual exclusion, because execution is idempotent — results are
+    # content-addressed and bit-identical across backends and workers, and
+    # ``put`` publishes by atomic rename.  A double-claim costs wall time,
+    # never correctness.
+
+    def try_claim(self, digest: str, owner: str, ttl_s: float) -> bool:
+        """Claim ``digest`` for ``owner`` until ``now + ttl_s``.
+
+        Returns False when another worker holds an unexpired lease.  An
+        expired lease is stolen (removed and re-claimed).
+        """
+        path = self._lease_path(digest)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        doc = json.dumps({"digest": digest, "owner": owner,
+                          "deadline": time.time() + ttl_s})
+        for _ in range(2):          # second pass: after stealing an expiry
+            try:
+                fd = os.open(path, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+            except FileExistsError:
+                info = self.lease_info(digest)
+                if info is not None and info["deadline"] > time.time():
+                    return False    # live lease held elsewhere
+                try:                # expired (or unreadable): steal
+                    os.unlink(path)
+                except FileNotFoundError:
+                    pass            # a racing stealer got there first
+                continue
+            with os.fdopen(fd, "w") as f:
+                f.write(doc)
+            return True
+        return False
+
+    def renew_lease(self, digest: str, owner: str, ttl_s: float) -> bool:
+        """Extend ``owner``'s lease; False if it was lost (stolen/expired)."""
+        info = self.lease_info(digest)
+        if info is None or info["owner"] != owner:
+            return False
+        path = self._lease_path(digest)
+        tmp = path + f".{owner}.tmp"
+        with open(tmp, "w") as f:
+            json.dump({"digest": digest, "owner": owner,
+                       "deadline": time.time() + ttl_s}, f)
+        os.replace(tmp, path)
+        return True
+
+    def release_lease(self, digest: str, owner: Optional[str] = None
+                      ) -> None:
+        """Remove the lease; with ``owner`` given, only if still held by
+        that owner — a worker whose lease was stolen must not unlink the
+        stealer's fresh lease on its way out."""
+        if owner is not None:
+            info = self.lease_info(digest)
+            if info is not None and info.get("owner") != owner:
+                return
+        try:
+            os.unlink(self._lease_path(digest))
+        except FileNotFoundError:
+            pass
+
+    def lease_info(self, digest: str) -> Optional[Dict]:
+        """{"owner", "deadline"} of the current lease, or None."""
+        try:
+            with open(self._lease_path(digest)) as f:
+                return json.load(f)
+        except (FileNotFoundError, json.JSONDecodeError):
+            return None

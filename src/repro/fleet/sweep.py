@@ -27,11 +27,20 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import json
 from typing import Any, Dict, Mapping, NamedTuple, Sequence, Tuple
 
 from repro.configs.base import SwarmConfig
 
 _CFG_FIELDS = {f.name for f in dataclasses.fields(SwarmConfig)}
+# tuple-typed config fields (exit_points, …) — JSON lists convert back
+_CFG_TUPLE_FIELDS = {f.name for f in dataclasses.fields(SwarmConfig)
+                     if isinstance(getattr(SwarmConfig(), f.name), tuple)}
+
+
+def _cfg_from_dict(d: Mapping[str, Any]) -> SwarmConfig:
+    return SwarmConfig(**{k: tuple(v) if k in _CFG_TUPLE_FIELDS else v
+                          for k, v in d.items()})
 
 
 class SweepPoint(NamedTuple):
@@ -120,3 +129,45 @@ class SweepSpec:
         for _, cells in self.axes:
             n *= len(cells)
         return n
+
+    # ---- cross-process contract (fleet/dispatch.py) ----------------------
+
+    def to_json(self) -> str:
+        """Serialize the spec for dispatch workers (other processes/hosts).
+
+        The JSON round-trips exactly: ``from_json(to_json())`` expands to
+        the same points with the same digests, which is what lets a remote
+        worker claim and compute points for a sweep it never constructed.
+        """
+        return json.dumps({
+            "name": self.name,
+            "base": dataclasses.asdict(self.base),
+            "axes": [[a, list(cells)] for a, cells in self.axes],
+            "strategies": list(self.strategies),
+            "num_runs": self.num_runs,
+            "seed": self.seed,
+        }, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, blob: str) -> "SweepSpec":
+        doc = json.loads(blob)
+
+        def cell(c):
+            # composite cells serialize as [label, {overrides}]; everything
+            # else is a plain config value (lists were tuples)
+            if (isinstance(c, list) and len(c) == 2
+                    and isinstance(c[1], dict)):
+                # tuple-typed override values (exit_points, …) came through
+                # JSON as lists; restore them or the rebuilt frozen config
+                # is unhashable under jit's static cfg argument
+                return (c[0], {k: tuple(v) if k in _CFG_TUPLE_FIELDS
+                               and isinstance(v, list) else v
+                               for k, v in c[1].items()})
+            return tuple(c) if isinstance(c, list) else c
+
+        return cls(
+            name=doc["name"], base=_cfg_from_dict(doc["base"]),
+            axes=tuple((a, tuple(cell(c) for c in cells))
+                       for a, cells in doc["axes"]),
+            strategies=tuple(int(s) for s in doc["strategies"]),
+            num_runs=int(doc["num_runs"]), seed=int(doc["seed"]))

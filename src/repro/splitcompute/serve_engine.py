@@ -16,7 +16,6 @@ CPU demo in examples/serve_swarm.py.
 from __future__ import annotations
 
 import dataclasses
-import time
 from collections import deque
 from typing import Dict, List, Optional, Tuple
 
@@ -35,6 +34,8 @@ from repro.splitcompute.partitioner import StagePlan, plan_stages
 
 @dataclasses.dataclass
 class ServeStats:
+    """Deterministic serving counters: all inputs come from the caller's
+    clock domain (``submit``/``step`` ``t_now``), never from wall time."""
     completed: int = 0
     latency_sum: float = 0.0
     exit_counts: Dict[int, int] = dataclasses.field(
@@ -49,7 +50,7 @@ class SplitServeEngine:
     """Decoder-only families (dense/moe/vlm): stages = layer ranges."""
 
     def __init__(self, cfg: ModelConfig, params, plan: StagePlan, *,
-                 tau_med=1.0, tau_high=3.0, alpha=0.3):
+                 tau_med=1.0, tau_high=3.0, alpha=0.3, max_results=64):
         assert cfg.family in ("dense", "moe", "vlm")
         self.cfg = cfg
         self.params = params
@@ -67,6 +68,14 @@ class SplitServeEngine:
         self.alpha = alpha
         self.queues = [deque() for _ in range(self.n_stages)]
         self.stats = ServeStats()
+        # completion stash, request_id -> logits, for callers that poll
+        # after the fact; the primary hand-off is step()'s return value,
+        # so the stash is small by default (each entry pins a full
+        # [batch, seq, vocab] buffer) — oldest evicted, 0 disables
+        self.results: Dict[int, jax.Array] = {}
+        self.max_results = max_results
+        self.clock = 0.0          # internal epoch clock (t_now fallback)
+        self._next_id = 0
         self._stage_fns = [self._make_stage_fn(i)
                            for i in range(self.n_stages)]
         self._head_fn = jax.jit(
@@ -95,20 +104,56 @@ class SplitServeEngine:
                 return s + 1
         return self.n_stages
 
-    def submit(self, batch: Dict, t_now: float):
-        h, positions = embed_in(self.params, self.cfg, batch)
-        self.queues[0].append({"h": h, "positions": positions,
-                               "t0": t_now, "stage": 0})
+    def submit(self, batch: Dict, t_now: Optional[float] = None) -> int:
+        """Enqueue one request batch; returns its request id.
 
-    def step(self, dt: float = 0.05):
+        ``t_now`` stamps arrival in the *caller's* clock domain (simulated
+        or wall) — latency is measured against the same domain's ``t_now``
+        passed to ``step``.  Omitted, it defaults to the engine's internal
+        epoch clock, keeping ``ServeStats`` fully deterministic.
+        """
+        h, positions = embed_in(self.params, self.cfg, batch)
+        rid = self._next_id
+        self._next_id += 1
+        self.queues[0].append({
+            "id": rid, "h": h, "positions": positions,
+            "t0": self.clock if t_now is None else t_now, "stage": 0})
+        return rid
+
+    def step(self, dt: float = 0.05, t_now: Optional[float] = None
+             ) -> List[Tuple[int, jax.Array]]:
         """One scheduling epoch: per-executor congestion update (Eqs. 14-15),
-        exit decision (Eq. 16), then each executor advances one request."""
+        exit decision (Eq. 16), then each executor advances one request —
+        and only requests that were queued when the epoch began.
+
+        Queue lengths are snapshotted up front: a request forwarded to
+        stage ``s+1`` this epoch is *not* popped again by the same loop
+        (it used to be, when it landed at the head of an empty queue — one
+        request could traverse the whole pipeline in a single epoch, so
+        queues never built depth past stage 0 and the early exit could
+        never fire downstream).
+
+        ``t_now`` is the epoch's completion timestamp in the caller's clock
+        domain (same domain as ``submit``); omitted, the internal epoch
+        clock advances by ``dt``.  Returns the requests completed this
+        epoch as ``(request_id, logits)`` pairs, also stashed in
+        ``self.results``.
+        """
+        if t_now is None:
+            self.clock += dt
+            t_now = self.clock
+        else:
+            self.clock = t_now
         qlen = jnp.asarray([float(len(q)) for q in self.queues])
         self.cong = congestion_update(self.cong, qlen, dt, self.alpha)
         labels = np.asarray(exit_label(self.cong.D, *self.tau))
 
+        # epoch snapshot: each executor serves at most one request that was
+        # already queued at epoch start
+        depth = [len(q) for q in self.queues]
+        completed: List[Tuple[int, jax.Array]] = []
         for s in range(self.n_stages):
-            if not self.queues[s]:
+            if depth[s] == 0:
                 continue
             req = self.queues[s].popleft()
             h = self._stage_fns[s](req["h"], req["positions"])
@@ -117,18 +162,24 @@ class SplitServeEngine:
             stop_at = self._exit_stage(lbl)
             if nxt >= stop_at or nxt >= self.n_stages:
                 logits = self._head_fn(h)
-                self.stats.completed += getattr(h, "shape", [1])[0]
-                self.stats.latency_sum += (time.perf_counter()
-                                           - req["t0"]) * h.shape[0]
-                self.stats.exit_counts[lbl] += h.shape[0]
+                size = h.shape[0]
+                self.stats.completed += size
+                self.stats.latency_sum += (t_now - req["t0"]) * size
+                self.stats.exit_counts[lbl] += size
+                if self.max_results:
+                    self.results[req["id"]] = logits
+                    while len(self.results) > self.max_results:
+                        self.results.pop(next(iter(self.results)))
+                completed.append((req["id"], logits))
             else:
                 req["h"] = h
                 req["stage"] = nxt
                 self.queues[nxt].append(req)
+        return completed
 
-    def drain(self, max_steps=1000):
+    def drain(self, max_steps=1000, dt: float = 0.05):
         for _ in range(max_steps):
             if not any(self.queues):
                 break
-            self.step()
+            self.step(dt)
         return self.stats

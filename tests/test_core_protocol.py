@@ -146,6 +146,22 @@ def test_exit_boundaries_and_accuracy_levels():
     np.testing.assert_allclose(np.asarray(acc), [0.95, 0.9, 0.6])
 
 
+def test_exit_boundary_layers_pins_table2_mapping():
+    """Table 2 label→layers mapping, pinned against the default config:
+    truncation depth decreases as congestion rises (full → L2+3 → L1+3)."""
+    from repro.configs.base import SwarmConfig
+    cfg = SwarmConfig()
+    L1, L2, L_full = cfg.exit_points
+    fin = cfg.exit_finalize_layers
+    layers = exit_boundary_layers(jnp.asarray([0, 1, 2]), cfg.exit_points,
+                                  fin)
+    np.testing.assert_array_equal(
+        np.asarray(layers), [L_full, L2 + fin, L1 + fin])   # 60 / 33 / 18
+    # finalize layers can never push a truncated exit past the full network
+    capped = exit_boundary_layers(jnp.asarray([1, 2]), (59, 59, 60), 3)
+    np.testing.assert_array_equal(np.asarray(capped), [60, 60])
+
+
 # ---------------------------------------------------------------------------
 # Alg. 1 — composed epoch
 # ---------------------------------------------------------------------------

@@ -30,7 +30,11 @@ N, RUNS = 8, 6
 @pytest.fixture(autouse=True)
 def _pinned_code_version(monkeypatch):
     """Digests must not drift with the working tree while tests run."""
+    from repro.fleet.store import code_version
     monkeypatch.setenv("REPRO_CODE_VERSION", "test-version")
+    code_version.cache_clear()
+    yield
+    code_version.cache_clear()
 
 
 @pytest.fixture(scope="module")

@@ -16,6 +16,10 @@ aggregate indices into ``artifacts/BENCH_fleet.json``.  Env knobs:
                             heartbeat-renew — so this is the reclaim delay)
   REPRO_FLEET_PROGRESS=<p>  progress.jsonl path (default artifacts/
                             progress.jsonl; run.py --watch renders it)
+  REPRO_FLEET_TRACE=C       per-task telemetry: run every sweep with
+                            SwarmConfig.trace_capacity = C (run.py --trace
+                            sets it), so BENCH_fleet.json sections gain the
+                            task-level indices (task_latency_cdf_s, …)
   REPRO_FULL_RUNS=1         the paper's 50 Monte-Carlo runs (default 16)
 
 Multi-host mode: with the ``REPRO_FLEET_*`` rank/world env contract set
@@ -24,6 +28,7 @@ against the shared cache; only rank 0 records/returns results.
 """
 from __future__ import annotations
 
+import dataclasses
 import os
 import time
 from typing import Dict, Optional, Sequence
@@ -63,6 +68,21 @@ def default_workers() -> int:
     return int(os.environ.get("REPRO_FLEET_WORKERS", "1"))
 
 
+def apply_trace_env(spec: SweepSpec) -> SweepSpec:
+    """Fold the ``REPRO_FLEET_TRACE`` capacity into a sweep's base config.
+
+    Tracing is part of the point identity (the capacity is in the config
+    digest), so traced and untraced results never alias in the store; with
+    the knob unset the spec is returned untouched and every emitted byte
+    matches an untraced build.
+    """
+    cap = int(os.environ.get("REPRO_FLEET_TRACE", "0"))
+    if cap <= 0 or spec.base.trace_capacity > 0:
+        return spec
+    return dataclasses.replace(
+        spec, base=dataclasses.replace(spec.base, trace_capacity=cap))
+
+
 def fleet_sweep(spec: SweepSpec, backend: Optional[str] = None,
                 store: Optional[ResultStore] = None,
                 record: bool = True,
@@ -77,6 +97,7 @@ def fleet_sweep(spec: SweepSpec, backend: Optional[str] = None,
     """
     backend = backend or DEFAULT_BACKEND
     workers = default_workers() if workers is None else workers
+    spec = apply_trace_env(spec)
     env = worker_env()
     if workers > 1 or env.world > 1:
         from repro.fleet.dispatch import DEFAULT_LEASE_TTL_S

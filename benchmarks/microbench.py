@@ -77,12 +77,56 @@ def run():
     return rows
 
 
+def _phi_inputs(key, n, runs_axis):
+    kF, kA = jax.random.split(jax.random.fold_in(key, n))
+    F = jax.random.uniform(kF, (runs_axis, n), jnp.float32, 100, 500)
+    dtx = jnp.where(jax.random.bernoulli(kA, 0.3, (runs_axis, n, n)),
+                    1e-3, -1e30)
+    return 1.0 / F, F, dtx
+
+
+def run_phi_wallclock(ns=(1024, 4096), runs_axis=1, iters=3,
+                      out_json=os.path.join(ART, "BENCH_fleet.json")):
+    """Backend-tagged wall-clock of the φ path the simulator dispatches.
+
+    Times ``kernels.ops.diffusive_phi`` — the entry point ``run_sim``
+    executes, i.e. the jnp reference on CPU and the real Pallas kernel on
+    TPU — and records ``{n, backend, us_per_call}`` rows into
+    ``BENCH_fleet.json`` under ``microbench_diffusive_phi_wallclock``.
+    On this container the rows are the CPU seed of the ROADMAP's
+    TPU-trajectory item; the same command on a TPU host appends
+    directly comparable ``backend="tpu"`` numbers.  Rank-0 guarded: a
+    non-zero fleet rank would race the BENCH read-modify-write and record
+    an arbitrary host's clock.
+    """
+    from repro.fleet import worker_env, write_bench_json
+    from repro.kernels import ops
+
+    if worker_env().rank != 0:
+        return []
+    backend = jax.default_backend()
+    key = jax.random.PRNGKey(0)
+    rows = []
+    for n in ns:
+        inv_phi, F, dtx = _phi_inputs(key, n, runs_axis)
+        us = bench(jax.jit(ops.diffusive_phi), inv_phi, F, dtx, iters=iters)
+        rows.append({"n": int(n), "runs_axis": int(runs_axis),
+                     "backend": backend, "us_per_call": round(us, 1)})
+        print(f"diffusive_phi_dispatch_n{n},{us:.1f},{backend}_R{runs_axis}")
+    write_bench_json(out_json, "microbench_diffusive_phi_wallclock", rows)
+    print(f"wrote {out_json} (microbench_diffusive_phi_wallclock, "
+          f"{len(rows)} sizes, backend={backend})")
+    return rows
+
+
 def run_phi_sweep(ns=(256, 1024, 4096), runs_axis=1, iters=2,
-                  out_json=os.path.join(ART, "BENCH_fleet.json")):
+                  out_json=os.path.join(ART, "BENCH_fleet.json"),
+                  wallclock_ns=(1024, 4096)):
     """diffusive_phi at swarm scale: jnp reference vs Pallas interpret mode.
 
     Returns the recorded rows; also written to ``BENCH_fleet.json`` under
-    ``microbench_diffusive_phi``.
+    ``microbench_diffusive_phi``, plus the dispatch-path wall-clock rows
+    of :func:`run_phi_wallclock` (``wallclock_ns=()`` skips them).
     """
     from repro.fleet.report import write_bench_json
     from repro.kernels.diffusive_phi import diffusive_phi as pl_phi
@@ -90,11 +134,7 @@ def run_phi_sweep(ns=(256, 1024, 4096), runs_axis=1, iters=2,
     key = jax.random.PRNGKey(0)
     rows = []
     for n in ns:
-        kF, kA = jax.random.split(jax.random.fold_in(key, n))
-        F = jax.random.uniform(kF, (runs_axis, n), jnp.float32, 100, 500)
-        dtx = jnp.where(jax.random.bernoulli(kA, 0.3, (runs_axis, n, n)),
-                        1e-3, -1e30)
-        inv_phi = 1.0 / F
+        inv_phi, F, dtx = _phi_inputs(key, n, runs_axis)
         ref_us = bench(jax.jit(ref.diffusive_phi), inv_phi, F, dtx,
                        iters=iters)
         # interpret=True compiles + emulates the TPU kernel on CPU — a
@@ -110,6 +150,9 @@ def run_phi_sweep(ns=(256, 1024, 4096), runs_axis=1, iters=2,
         print(f"diffusive_phi_n{n},{pal_us:.1f},pallas_interpret_R{runs_axis}")
     write_bench_json(out_json, "microbench_diffusive_phi", rows)
     print(f"wrote {out_json} (microbench_diffusive_phi, {len(rows)} sizes)")
+    if wallclock_ns:
+        run_phi_wallclock(ns=wallclock_ns, runs_axis=runs_axis,
+                          out_json=out_json)
     return rows
 
 

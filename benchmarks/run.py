@@ -9,6 +9,11 @@ artifacts.  Env knobs:
 Flags:
   --workers N   dispatch every fleet sweep across N local worker processes
                 (``repro.fleet.dispatch``; results byte-identical to N=1)
+  --trace [C]   run every fleet sweep with per-task telemetry
+                (``SwarmConfig.trace_capacity = C``, default 65536): each
+                sweep's BENCH_fleet.json section gains the task-level
+                indices (``task_latency_cdf_s``, hop/exit histograms,
+                energy per task) computed from in-scan TaskRecords
   --watch [p]   don't run benchmarks: follow a progress.jsonl (default
                 ``artifacts/progress.jsonl``) and render completed/total,
                 points/min and ETA for the sweep currently running —
@@ -98,6 +103,11 @@ def main(argv=None) -> None:
     ap.add_argument("--workers", type=int, default=None, metavar="N",
                     help="dispatch fleet sweeps across N local worker "
                          "processes (repro.fleet.dispatch)")
+    ap.add_argument("--trace", nargs="?", const=65536, default=None,
+                    type=int, metavar="CAPACITY",
+                    help="per-task telemetry: run sweeps with "
+                         "SwarmConfig.trace_capacity=CAPACITY (default "
+                         "65536) so BENCH sections gain task-level CDFs")
     ap.add_argument("--watch", nargs="?", const=PROGRESS_JSONL, default=None,
                     metavar="PROGRESS_JSONL",
                     help="follow a progress file instead of running "
@@ -111,6 +121,8 @@ def main(argv=None) -> None:
         # common.fleet_sweep reads the knob at call time, so setting the
         # env here covers every figure sweep below
         os.environ["REPRO_FLEET_WORKERS"] = str(args.workers)
+    if args.trace is not None:
+        os.environ["REPRO_FLEET_TRACE"] = str(args.trace)
     run_benchmarks()
 
 

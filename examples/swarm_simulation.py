@@ -17,6 +17,12 @@ N >= 1k regime); all backends are bit-identical (DESIGN.md §8).
 dispatched across N worker *processes* through ``repro.fleet.dispatch``
 (lease-file work stealing over a shared store, DESIGN.md §9) — same
 numbers, point axis parallel.
+
+``--trace out.json`` additionally runs one per-task-telemetry simulation
+of the Distributed strategy (``repro.trace``, DESIGN.md §10): prints the
+task-level latency CDF / hop / exit-label indices and writes a
+Chrome-trace/Perfetto timeline of every task lifetime and net transfer —
+load it at https://ui.perfetto.dev or chrome://tracing.
 """
 import argparse
 import dataclasses
@@ -65,6 +71,12 @@ def main():
     ap.add_argument("--channel", default="two_ray",
                     choices=sorted(CHANNEL_MODELS))
     ap.add_argument("--fault", default="none", choices=sorted(FAULT_MODELS))
+    ap.add_argument("--trace", default=None, metavar="OUT_JSON",
+                    help="run one traced Distributed simulation and write "
+                         "a Chrome-trace/Perfetto timeline here")
+    ap.add_argument("--trace-capacity", type=int, default=65536,
+                    help="TaskRecord slots for --trace (records beyond "
+                         "this count as overflow)")
     args = ap.parse_args()
 
     key = jax.random.PRNGKey(0)
@@ -80,6 +92,28 @@ def main():
           f"{args.mobility}/{args.channel}/fault:{args.fault}")
 
     cfg_ee = dataclasses.replace(cfg, early_exit_enabled=True)
+
+    if args.trace:
+        from repro.trace import decode, trace_indices, write_chrome_trace
+        cfg_tr = dataclasses.replace(cfg,
+                                     trace_capacity=args.trace_capacity)
+        m = run_batch(key, cfg_tr, jnp.int32(4), args.workers, 1)
+        dec = decode(np.asarray(m["trace_records"]),
+                     np.asarray(m["trace_overflow"]))
+        idx = trace_indices(dec)
+        print(f"\nper-task telemetry (Distributed, 1 run, "
+              f"capacity {args.trace_capacity}):")
+        print(f"  tasks={idx['task_count']} dropped={idx['dropped_count']} "
+              f"overflow={idx['trace_overflow']}")
+        if "task_latency_cdf_s" in idx:
+            cdf = idx["task_latency_cdf_s"]
+            print(f"  latency p50={cdf['p50']:.3f}s p95={cdf['p95']:.3f}s "
+                  f"p99={cdf['p99']:.3f}s  "
+                  f"jain={idx['task_latency_jain']:.3f}")
+            print(f"  hops={idx['hop_histogram']} "
+                  f"exits={idx['exit_label_histogram']}")
+        print(f"wrote {write_chrome_trace(args.trace, dec)} "
+              "(open in chrome://tracing or ui.perfetto.dev)")
 
     if args.procs > 1:
         # two specs — the five plain strategies, then Distributed+EE (a

@@ -316,7 +316,7 @@ class SwarmConfig:
     # config change — no code edits, one executable per (cfg, n) pair.
     # mobility: circular|random_waypoint|gauss_markov|levy_flight
     mobility_model: str = "circular"
-    # channel: two_ray|free_space|log_normal|rician|nakagami
+    # channel: two_ray|free_space|log_normal|log_normal_corr|rician|nakagami
     channel_model: str = "two_ray"
     fault_model: str = "none"                # none|markov
     # random-waypoint / Gauss-Markov / Lévy mobility parameters
@@ -333,9 +333,20 @@ class SwarmConfig:
     shadowing_sigma_db: float = 6.0          # log-normal shadowing std
     rician_k_db: float = 6.0                 # Rician K-factor (LoS/NLoS dB)
     nakagami_m: float = 2.0                  # Nakagami shape (1 = Rayleigh)
+    # Gudmundson decorrelation distance of the spatially-correlated
+    # shadowing model (log_normal_corr): shadowing processes of two nodes
+    # d metres apart correlate as exp(-d / shadow_corr_m)
+    shadow_corr_m: float = 500.0
     # node fault/churn (markov): mean dwell times of the up/down chain
     fault_mean_up_s: float = 30.0
     fault_mean_down_s: float = 5.0
     # task profile (illustrative detection CNN, DESIGN.md §3)
     task_layers: int = 60
     task_gflops_total: float = 12.0
+    # --- per-task telemetry (repro.trace, DESIGN.md §10) ---
+    # > 0 enables in-scan TaskRecord capture: one fixed-width record per
+    # completed/dropped task, scattered by global seq into a buffer of this
+    # many slots (records with seq >= capacity are counted as overflow, not
+    # captured).  0 (default) is fully off — no trace state exists and
+    # every metric is bit-identical to an untraced build.
+    trace_capacity: int = 0

@@ -16,7 +16,9 @@ from typing import Dict, Mapping, Optional, Sequence
 
 import numpy as np
 
-LATENCY_QS = (0.05, 0.25, 0.5, 0.75, 0.9, 0.95, 0.99)
+from repro.trace.aggregate import QS as LATENCY_QS
+from repro.trace.aggregate import quantile_summary
+
 BENCH_NAME = "BENCH_fleet.json"
 
 
@@ -29,9 +31,10 @@ def ci95(x) -> tuple:
 
 
 def latency_cdf(lat_s, qs: Sequence[float] = LATENCY_QS) -> Dict[str, float]:
-    """Empirical latency quantiles (seconds) of a 1-D latency sample."""
-    lat = np.asarray(lat_s, np.float64)
-    return {f"p{int(q * 100):02d}": float(np.quantile(lat, q)) for q in qs}
+    """Empirical latency quantiles (seconds) of a 1-D latency sample —
+    the same grid/implementation as the task-level indices
+    (``repro.trace.aggregate``), so the two can never drift apart."""
+    return quantile_summary(lat_s, qs)
 
 
 def point_indices(metrics: Mapping[str, np.ndarray],
@@ -41,19 +44,27 @@ def point_indices(metrics: Mapping[str, np.ndarray],
     ``metrics["avg_latency_s"]`` holds one *mean* latency per Monte-Carlo
     run, so its quantiles describe the distribution of run means — emitted
     as ``run_mean_latency_quantiles_s`` (an earlier revision mislabeled
-    them ``latency_cdf_s``; Fig. 4a's CDF is per-*task*).  Pass the pooled
-    per-task latency sample as ``per_task_latency_s`` to also emit the true
-    ``task_latency_cdf_s``.
+    them ``latency_cdf_s``; Fig. 4a's CDF is per-*task*).  The true
+    ``task_latency_cdf_s`` comes from the point's in-scan TaskRecords when
+    it ran traced (``SwarmConfig.trace_capacity > 0``), or from an
+    explicit pooled ``per_task_latency_s`` sample (which wins when both
+    are present).
     """
     out = {}
     for k, v in metrics.items():
-        if k.startswith("_"):
-            continue     # wall-time etc.: not deterministic, keep out
+        if k.startswith("_") or k.startswith("trace_"):
+            continue     # wall-time / record buffers: not per-run scalars
         mean, half = ci95(v)
         out[k] = {"mean": float(mean), "ci95": float(half)}
     if "avg_latency_s" in metrics:
         out["run_mean_latency_quantiles_s"] = latency_cdf(
             metrics["avg_latency_s"])
+    if "trace_records" in metrics:
+        # per-task telemetry captured in-scan (repro.trace): the true
+        # task-level indices, pooled over the point's Monte-Carlo runs
+        from repro.trace import decode, trace_indices
+        out.update(trace_indices(decode(
+            metrics["trace_records"], metrics.get("trace_overflow"))))
     if per_task_latency_s is not None and len(per_task_latency_s):
         out["task_latency_cdf_s"] = latency_cdf(per_task_latency_s)
     for k in ("jain_fairness", "energy_per_task_j"):

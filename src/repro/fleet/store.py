@@ -87,6 +87,24 @@ def code_version() -> str:
         return "unknown"
 
 
+def _compact_trace(key: str, v) -> np.ndarray:
+    """Trim trailing all-unwritten slots off a ``trace_records`` buffer.
+
+    Slots are seq-indexed, so a buffer sized generously above the task
+    count is mostly ``seq = -1`` sentinel rows; persisting them as JSON
+    would bloat ``result.json`` by the (capacity / tasks) ratio.  Only
+    slots past the last written seq of *any* run are dropped — per-run
+    shape structure and every written record survive, so decode/export of
+    a cache hit equals the freshly computed buffer.
+    """
+    rec = np.asarray(v, np.float32)
+    if key != "trace_records" or rec.ndim != 3 or rec.shape[1] == 0:
+        return rec
+    from repro.trace import schema
+    written = np.nonzero((rec[..., schema.SEQ] >= 0).any(axis=0))[0]
+    return rec[:, :int(written[-1]) + 1 if written.size else 0]
+
+
 def point_digest(point: SweepPoint, version: Optional[str] = None) -> str:
     """Content address of a sweep point's result."""
     payload = {
@@ -134,9 +152,12 @@ class ResultStore:
             meta: Optional[Dict] = None) -> str:
         d = self._dir(digest)
         os.makedirs(d, exist_ok=True)
+        # nested tolist() keeps array shapes (the trace record buffers are
+        # [num_runs, capacity, fields]); for the historical 1-D metric
+        # vectors the emitted JSON is byte-identical to the flat form
         doc = {
             "meta": meta or {},
-            "metrics": {k: [float(x) for x in np.asarray(v).ravel()]
+            "metrics": {k: _compact_trace(k, v).tolist()
                         for k, v in metrics.items()},
         }
         tmp = os.path.join(d, "result.json.tmp")

@@ -15,7 +15,6 @@ CPU demo in examples/serve_swarm.py.
 """
 from __future__ import annotations
 
-import dataclasses
 from collections import deque
 from typing import Dict, List, Optional, Tuple
 
@@ -30,20 +29,76 @@ from repro.models import build_model
 from repro.models.common import slice_layers
 from repro.models.transformer import embed_in, head_out, run_layers
 from repro.splitcompute.partitioner import StagePlan, plan_stages
+from repro.trace import schema
 
 
-@dataclasses.dataclass
 class ServeStats:
-    """Deterministic serving counters: all inputs come from the caller's
-    clock domain (``submit``/``step`` ``t_now``), never from wall time."""
-    completed: int = 0
-    latency_sum: float = 0.0
-    exit_counts: Dict[int, int] = dataclasses.field(
-        default_factory=lambda: {0: 0, 1: 0, 2: 0})
+    """Deterministic serving telemetry on the shared TaskRecord vocabulary
+    (``repro.trace.schema``, DESIGN.md §10.1): one record row per served
+    sample — request id as ``seq``, entry stage as ``src``, completing
+    stage as ``dst``, stages traversed as ``hops`` — so sim and serve
+    aggregate/export through the same ``repro.trace`` pipeline.  All
+    timestamps come from the caller's clock domain (``submit``/``step``
+    ``t_now``), never from wall time; the historical counter surface
+    (``completed`` / ``latency_sum`` / ``exit_counts`` / ``avg_latency``)
+    is derived from the records.
+    """
+
+    def __init__(self, max_records: Optional[int] = None):
+        # counters are maintained incrementally (O(1) access however long
+        # the serve loop runs); the rows are the exportable telemetry and
+        # can be bounded like the sim side's trace_capacity — beyond
+        # ``max_records`` the counters keep counting, rows overflow
+        self._rows: List[np.ndarray] = []
+        self.max_records = max_records
+        self.record_overflow = 0
+        self._completed = 0
+        self._latency_sum = 0.0
+        self._exit_counts: Dict[int, int] = {0: 0, 1: 0, 2: 0}
+
+    def record(self, *, seq, src, dst, created_t, completed_t, exit_label,
+               layers, hops, count=1) -> None:
+        """Append ``count`` identical sample records (one per batch row)."""
+        self._completed += count
+        self._latency_sum += float(completed_t - created_t) * count
+        lbl = int(exit_label)
+        self._exit_counts[lbl] = self._exit_counts.get(lbl, 0) + count
+        kept = count
+        if self.max_records is not None:
+            kept = max(0, min(count, self.max_records - len(self._rows)))
+            self.record_overflow += count - kept
+        if kept:
+            row = schema.pack_np(seq, src, dst, created_t, completed_t,
+                                 exit_label, layers, hops)
+            self._rows.extend([row] * kept)
+
+    @property
+    def records(self) -> np.ndarray:
+        """``[completed, NUM_FIELDS]`` TaskRecord rows (trace.decode-able)."""
+        if not self._rows:
+            return np.zeros((0, schema.NUM_FIELDS), np.float64)
+        return np.stack(self._rows)
+
+    @property
+    def completed(self) -> int:
+        return self._completed
+
+    @property
+    def latency_sum(self) -> float:
+        return self._latency_sum
+
+    @property
+    def exit_counts(self) -> Dict[int, int]:
+        return dict(self._exit_counts)
 
     @property
     def avg_latency(self):
         return self.latency_sum / max(self.completed, 1)
+
+    def __repr__(self):
+        return (f"ServeStats(completed={self.completed}, "
+                f"avg_latency={self.avg_latency:.4f}, "
+                f"exit_counts={self.exit_counts})")
 
 
 class SplitServeEngine:
@@ -163,9 +218,11 @@ class SplitServeEngine:
             if nxt >= stop_at or nxt >= self.n_stages:
                 logits = self._head_fn(h)
                 size = h.shape[0]
-                self.stats.completed += size
-                self.stats.latency_sum += (t_now - req["t0"]) * size
-                self.stats.exit_counts[lbl] += size
+                self.stats.record(
+                    seq=req["id"], src=0, dst=s, created_t=req["t0"],
+                    completed_t=t_now, exit_label=lbl,
+                    layers=int(self.plan.boundaries[s + 1]), hops=s,
+                    count=size)
                 if self.max_results:
                     self.results[req["id"]] = logits
                     while len(self.results) > self.max_results:

@@ -83,6 +83,31 @@ def log_normal(key, dist_m: jax.Array, cfg: SwarmConfig) -> jax.Array:
     return base + upper + upper.T
 
 
+def log_normal_corr(key, dist_m: jax.Array, cfg: SwarmConfig) -> jax.Array:
+    """Log-distance pathloss with *spatially correlated* log-normal
+    shadowing (Gudmundson '91): each node carries a shadowing process that
+    decorrelates exponentially over distance, so nearby UAVs see similar
+    obstruction — the realistic failure mode where a whole cluster loses
+    links together, which iid ``log_normal`` can never produce.
+
+    Node field z ~ N(0, Σ) with Σ_ik = exp(-d_ik / ``shadow_corr_m``)
+    (sampled via Cholesky of the jittered covariance); the link value is
+    the endpoint sum X_ij = σ (z_i + z_j) / √(2 (1 + ρ_ij)), normalized so
+    every off-diagonal link keeps the exact marginal N(0, σ²) of the iid
+    model.  Symmetric per link by construction (the endpoint sum *is* the
+    mirrored upper triangle), deterministic (zero) on the diagonal,
+    redrawn each epoch.  ``shadow_corr_m → 0`` leaves only the shared-
+    endpoint correlation of 1/2; large values shadow the swarm as one.
+    """
+    base = _log_distance_db(dist_m, cfg)
+    n = dist_m.shape[-1]
+    rho = jnp.exp(-dist_m / jnp.maximum(cfg.shadow_corr_m, 1e-6))
+    chol = jnp.linalg.cholesky(rho + 1e-4 * jnp.eye(n, dtype=rho.dtype))
+    z = chol @ jax.random.normal(key, (n,), jnp.float32)
+    x = (z[:, None] + z[None, :]) / jnp.sqrt(2.0 * (1.0 + rho))
+    return base + cfg.shadowing_sigma_db * x * (1.0 - jnp.eye(n))
+
+
 def rician(key, dist_m: jax.Array, cfg: SwarmConfig) -> jax.Array:
     """Log-distance pathloss under Rician small-scale fading (strong LoS —
     the typical UAV-to-UAV air corridor).

@@ -29,8 +29,15 @@ def queued_gflops(st, profile: TaskProfile) -> jax.Array:
     return jnp.sum(jnp.where(st["q_active"], rem, 0.0), axis=1)
 
 
-def push(st, mask, cum, created, visited):
-    """Insert one task per node where mask; drops (with count) if full."""
+def push(st, mask, cum, created, visited, extras=None):
+    """Insert one task per node where mask; drops (with count) if full.
+
+    ``extras`` scatters additional per-task columns into ``q_<name>``
+    arrays alongside the core fields (the trace layer's attribution state,
+    ``repro.trace.record``); ``None`` leaves the state untouched beyond
+    the core fields — the untraced path is byte-for-byte the historical
+    one.
+    """
     n, Q = st["q_active"].shape
     free = jnp.argmin(st["q_active"], axis=1)              # first False slot
     has_free = ~jnp.all(st["q_active"], axis=1)
@@ -38,6 +45,11 @@ def push(st, mask, cum, created, visited):
     rows = jnp.arange(n)
     seq = st["seq_counter"] + jnp.cumsum(ok.astype(jnp.int32)) - 1
     st = dict(st)
+    for name, val in (extras or {}).items():
+        k = f"q_{name}"
+        st[k] = st[k].at[rows, free].set(
+            jnp.where(ok, jnp.asarray(val, st[k].dtype),
+                      st[k][rows, free]))
     st["q_active"] = st["q_active"].at[rows, free].set(
         jnp.where(ok, True, st["q_active"][rows, free]))
     st["q_cum"] = st["q_cum"].at[rows, free].set(

@@ -164,6 +164,7 @@ register_mobility("levy_flight", _mobility.init_levy_flight,
 register_channel("two_ray", _channel.two_ray)
 register_channel("free_space", _channel.free_space)
 register_channel("log_normal", _channel.log_normal)
+register_channel("log_normal_corr", _channel.log_normal_corr)
 register_channel("rician", _channel.rician)
 register_channel("nakagami", _channel.nakagami)
 

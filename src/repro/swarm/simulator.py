@@ -38,6 +38,7 @@ from repro.swarm.queues import head_slot, push, queued_gflops
 from repro.swarm.scenario import (burst_arrivals, get_channel, get_fault,
                                   get_mobility, mask_adjacency)
 from repro.swarm.tasks import TaskProfile, make_profile
+from repro.trace import record as trace_record
 
 BIG = 1e30
 
@@ -92,6 +93,10 @@ def init_state(key, cfg: SwarmConfig, n: int) -> Dict:
         "e_comp": jnp.float32(0), "e_tx": jnp.float32(0),
         "tx_count": jnp.float32(0), "tx_time_sum": jnp.float32(0),
         "drop_count": jnp.float32(0), "gen_count": jnp.float32(0),
+        # per-task telemetry (repro.trace): {} when trace_capacity == 0,
+        # so the untraced state pytree — and every number downstream — is
+        # exactly the historical one
+        **trace_record.init_trace(cfg, n),
     }
 
 
@@ -100,8 +105,9 @@ def init_state(key, cfg: SwarmConfig, n: int) -> Dict:
 # ---------------------------------------------------------------------------
 
 
-def _compute_pass(st, budget, targets_cum, acc_levels, t_now, eJ):
+def _compute_pass(st, budget, targets_cum, t_now, cfg: SwarmConfig):
     """Advance each node's head task by up to `budget` GFLOPs."""
+    eJ = cfg.energy_per_gflop_j
     n, Q = st["q_active"].shape
     rows = jnp.arange(n)
     head, has = head_slot(st)
@@ -111,7 +117,7 @@ def _compute_pass(st, budget, targets_cum, acc_levels, t_now, eJ):
     new_cum = cur + adv
     completed = has & (new_cum >= targets_cum - 1e-6)
     lat = t_now - st["q_created"][rows, head]
-    acc = exit_accuracy(st["xi_label"], acc_levels)
+    acc = exit_accuracy(st["xi_label"], cfg.exit_accuracy)
 
     st = dict(st)
     st["q_cum"] = st["q_cum"].at[rows, head].set(
@@ -123,6 +129,16 @@ def _compute_pass(st, budget, targets_cum, acc_levels, t_now, eJ):
     st["acc_sum"] = st["acc_sum"] + jnp.sum(jnp.where(completed, acc, 0.0))
     st["q_active"] = st["q_active"].at[rows, head].set(
         jnp.where(completed, False, st["q_active"][rows, head]))
+    if trace_record.enabled(cfg):
+        st["q_energy"] = st["q_energy"].at[rows, head].add(adv * eJ)
+        st = trace_record.write_records(
+            st, completed, seq=st["q_seq"][rows, head],
+            src=st["q_src"][rows, head], dst=rows,
+            created_t=st["q_created"][rows, head], completed_t=t_now,
+            exit_label=st["xi_label"], layers=st["xi_layers"],
+            hops=jnp.sum(st["q_visited"][rows, head], axis=-1),
+            energy_j=st["q_energy"][rows, head],
+            tx_time_s=st["q_txtime"][rows, head])
     return st, budget - adv
 
 
@@ -135,8 +151,14 @@ def _tick(st, key, cfg: SwarmConfig, profile: TaskProfile, cap, alive,
     st = dict(st)
     st["burst_on"], arrive = burst_arrivals(st["burst_on"], key, cfg)
     arrive = arrive & alive
-    st = push(st, arrive, jnp.zeros((n,)), jnp.full((n,), t_now),
-              jnp.zeros((n, n), bool))
+    if trace_record.enabled(cfg):
+        st = trace_record.traced_push(
+            st, arrive, jnp.zeros((n,)), jnp.full((n,), t_now),
+            jnp.zeros((n, n), bool), src=jnp.arange(n), energy=0.0,
+            txtime=0.0, t_now=t_now, cfg=cfg)
+    else:
+        st = push(st, arrive, jnp.zeros((n,)), jnp.full((n,), t_now),
+                  jnp.zeros((n, n), bool))
     st["gen_count"] = st["gen_count"] + jnp.sum(arrive.astype(jnp.float32))
 
     # (b) compute (budget cascade x2: finish a task and start the next;
@@ -145,9 +167,7 @@ def _tick(st, key, cfg: SwarmConfig, profile: TaskProfile, cap, alive,
                                           profile.gflops.shape[0])]
     budget = jnp.where(alive, st["F"] * tick, 0.0)
     for _ in range(2):
-        st, budget = _compute_pass(st, budget, targets,
-                                   cfg.exit_accuracy, t_now,
-                                   cfg.energy_per_gflop_j)
+        st, budget = _compute_pass(st, budget, targets, t_now, cfg)
 
     # (c) transfer progress + delivery
     return transfer_mod.progress(st, cap, alive, cfg, t_now)
@@ -300,7 +320,7 @@ def summarize(st, cfg: SwarmConfig, profile: TaskProfile) -> Dict:
     ae = (st["e_comp"] + st["e_tx"]) / done
     al = st["lat_sum"] / done
     fom = tps * acc / jnp.maximum(ae * al, 1e-12)
-    return {
+    out = {
         "completed": st["done_count"], "generated": st["gen_count"],
         "avg_latency_s": al, "avg_accuracy": acc,
         "remaining_gflops": jnp.sum(rem_q) + jnp.sum(rem_tx),
@@ -314,6 +334,13 @@ def summarize(st, cfg: SwarmConfig, profile: TaskProfile) -> Dict:
         "dropped": st["drop_count"],
         "fom": fom,
     }
+    if trace_record.enabled(cfg):
+        # per-task telemetry rides next to the scalar metrics; downstream
+        # consumers key off the trace_ prefix (report skips ci95 for them,
+        # decode/aggregate turn them into task-level indices)
+        out["trace_records"] = st["trace_records"]
+        out["trace_overflow"] = st["trace_overflow"]
+    return out
 
 
 def run_many(key, cfg: SwarmConfig, strategy, n: int, num_runs: int) -> Dict:

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from repro.configs.base import SwarmConfig
 from repro.swarm.queues import INT_MAX, head_slot, pop_head, push
 from repro.swarm.tasks import TaskProfile, boundary_bits, snap_to_boundary
+from repro.trace import record as trace_record
 
 
 def initiate(st, elig, tgt, t0, profile: TaskProfile):
@@ -26,6 +27,10 @@ def initiate(st, elig, tgt, t0, profile: TaskProfile):
     cum_snap = snap_to_boundary(profile, cum_h)
     bits = boundary_bits(profile, cum_h)
     st = dict(st)
+    if "tx_src" in st:       # trace attribution rides along (DESIGN §10.2)
+        for f in ("src", "energy", "txtime"):
+            st[f"tx_{f}"] = jnp.where(elig, st[f"q_{f}"][rows, head],
+                                      st[f"tx_{f}"])
     st["tx_dst"] = jnp.where(elig, tgt, st["tx_dst"])
     st["tx_bits"] = jnp.where(elig, bits, st["tx_bits"])
     st["tx_cum"] = jnp.where(elig, cum_snap, st["tx_cum"])
@@ -53,11 +58,14 @@ def progress(st, cap, alive, cfg: SwarmConfig, t_now):
     rate = cap[rows, st["tx_dst"]]                         # bit/s
     live = alive & alive[st["tx_dst"]]
     active = st["tx_active"] & live
+    tx_w = 10.0 ** (cfg.tx_power_dbm / 10.0) * 1e-3
     st = dict(st)
     st["tx_bits"] = jnp.where(active, st["tx_bits"] - rate * tick,
                               st["tx_bits"])
-    st["e_tx"] = st["e_tx"] + jnp.sum(active) * (
-        10.0 ** (cfg.tx_power_dbm / 10.0) * 1e-3) * tick
+    st["e_tx"] = st["e_tx"] + jnp.sum(active) * tx_w * tick
+    if "tx_energy" in st:    # attribute the airtime joules to the task
+        st["tx_energy"] = st["tx_energy"] + jnp.where(active,
+                                                      tx_w * tick, 0.0)
     arrived = active & (st["tx_bits"] <= 0.0)
     # receiver contention: lowest-index origin wins per destination
     origin_rank = jnp.where(arrived, rows, INT_MAX)
@@ -73,7 +81,15 @@ def progress(st, cap, alive, cfg: SwarmConfig, t_now):
     created_d = st["tx_created"][inv]
     visited_d = st["tx_visited"][inv] | jax.nn.one_hot(
         inv, n, dtype=bool)                                 # mark origin
-    st = push(st, dst_mask, cum_d, created_d, visited_d)
+    if trace_record.enabled(cfg):
+        st = trace_record.traced_push(
+            st, dst_mask, cum_d, created_d, visited_d,
+            src=st["tx_src"][inv], energy=st["tx_energy"][inv],
+            txtime=st["tx_txtime"][inv] + jnp.where(
+                dst_mask, t_now - st["tx_start"][inv], 0.0),
+            t_now=t_now, cfg=cfg)
+    else:
+        st = push(st, dst_mask, cum_d, created_d, visited_d)
     st["tx_active"] = st["tx_active"] & ~deliver
     st["tx_time_sum"] = st["tx_time_sum"] + jnp.sum(
         jnp.where(deliver, t_now - st["tx_start"], 0.0))

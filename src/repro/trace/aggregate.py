@@ -1,0 +1,68 @@
+"""Task-level aggregates (DESIGN.md §10.3) — the paper's evaluation
+currency: per-task latency distributions, Jain fairness over task
+latencies, hop/exit histograms and energy per task, all computed from
+decoded TaskRecords rather than run means.
+
+Kept free of ``repro.fleet`` imports so ``fleet.report`` can call in
+without a cycle; the quantile grid matches ``report.LATENCY_QS``.
+"""
+from __future__ import annotations
+
+from typing import Dict, Mapping, Sequence
+
+import numpy as np
+
+QS = (0.05, 0.25, 0.5, 0.75, 0.9, 0.95, 0.99)
+
+
+def quantile_summary(x, qs: Sequence[float] = QS) -> Dict[str, float]:
+    """``{"p05": ..., "p50": ..., ...}`` of a 1-D sample."""
+    x = np.asarray(x, np.float64)
+    return {f"p{int(q * 100):02d}": float(np.quantile(x, q)) for q in qs}
+
+
+def jain_fairness(x) -> float:
+    """Jain index (Σx)² / (n Σx²) of a 1-D sample."""
+    x = np.asarray(x, np.float64)
+    if x.size == 0:
+        return 0.0
+    return float(x.sum() ** 2 / (x.size * np.square(x).sum() + 1e-12))
+
+
+def _histogram(col) -> Dict[str, int]:
+    vals, counts = np.unique(np.asarray(col, np.int64), return_counts=True)
+    return {str(int(v)): int(c) for v, c in zip(vals, counts)}
+
+
+def hop_histogram(dec: Mapping) -> Dict[str, int]:
+    """Completed-task counts by number of forwarding hops."""
+    return _histogram(dec["hops"][~dec["is_dropped"]])
+
+
+def exit_label_histogram(dec: Mapping) -> Dict[str, int]:
+    """Task counts by exit label (0 full / 1 med / 2 high / 3 dropped)."""
+    return _histogram(dec["exit_label"])
+
+
+def trace_indices(dec: Mapping) -> Dict:
+    """Decoded records → the JSON-ready task-level section of a report.
+
+    Deterministic in the records; empty-completion traces degrade to the
+    counters alone (no quantiles of an empty sample).
+    """
+    done = ~dec["is_dropped"]
+    lat = dec["latency_s"][done]
+    out: Dict = {
+        "task_count": int(done.sum()),
+        "dropped_count": int(dec["is_dropped"].sum()),
+        "trace_overflow": int(dec["overflow"]),
+        "exit_label_histogram": exit_label_histogram(dec),
+    }
+    if lat.size:
+        out["task_latency_cdf_s"] = quantile_summary(lat)
+        out["task_latency_jain"] = jain_fairness(lat)
+        out["hop_histogram"] = hop_histogram(dec)
+        out["energy_per_task_j_quantiles"] = quantile_summary(
+            dec["energy_j"][done])
+        out["tx_time_s_mean"] = float(dec["tx_time_s"][done].mean())
+    return out

@@ -1,0 +1,77 @@
+"""Chrome-trace / Perfetto timeline export (DESIGN.md §10.4).
+
+One decoded run → the Trace Event JSON format both ``chrome://tracing``
+and https://ui.perfetto.dev load directly:
+
+  * one complete (``"X"``) slice per completed task on its completion
+    node's track, spanning creation → completion (µs timebase);
+  * one instant (``"i"``) event per dropped task at its drop time;
+  * a flow arrow (``"s"`` → ``"f"``) from the generating node's track to
+    the completion node's for every task that was forwarded at least once
+    — per-hop timestamps are not in the TaskRecord (one record per task,
+    not per hop), so the arrow renders the net src→dst relocation, with
+    the hop count and total in-flight time in ``args``.
+
+Everything is stamped from TaskRecord fields only — no wall clock — so
+the export is deterministic in the records.
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Mapping
+
+from repro.trace import schema
+
+_US = 1e6     # trace event timestamps are microseconds
+
+
+def _base(dec: Mapping, i: int, ph: str) -> Dict:
+    return {"ph": ph, "pid": 0, "tid": int(dec["dst"][i])}
+
+
+def chrome_trace_events(dec: Mapping) -> List[Dict]:
+    """Decoded single-run records → Trace Event list (chronological)."""
+    tracks = sorted({*map(int, dec["src"]), *map(int, dec["dst"])})
+    events: List[Dict] = [
+        {"ph": "M", "pid": 0, "name": "process_name",
+         "args": {"name": "swarm"}}]
+    events += [{"ph": "M", "pid": 0, "tid": t, "name": "thread_name",
+                "args": {"name": f"uav {t}"}} for t in tracks]
+    order = sorted(range(len(dec["seq"])),
+                   key=lambda i: (float(dec["created_t"][i]),
+                                  int(dec["seq"][i])))
+    for i in order:
+        seq = int(dec["seq"][i])
+        args = {"seq": seq, "src": int(dec["src"][i]),
+                "hops": int(dec["hops"][i]),
+                "exit_label": int(dec["exit_label"][i]),
+                "layers": int(dec["layers"][i]),
+                "energy_j": float(dec["energy_j"][i]),
+                "tx_time_s": float(dec["tx_time_s"][i])}
+        if dec["is_dropped"][i]:
+            events.append({**_base(dec, i, "i"), "s": "t",
+                           "name": f"drop {seq}", "cat": "drop",
+                           "ts": dec["completed_t"][i] * _US,
+                           "args": args})
+            continue
+        events.append({**_base(dec, i, "X"), "name": f"task {seq}",
+                       "cat": "task", "ts": dec["created_t"][i] * _US,
+                       "dur": dec["latency_s"][i] * _US, "args": args})
+        if dec["hops"][i] > 0:      # net relocation arrow src → dst
+            events.append({"ph": "s", "pid": 0, "tid": int(dec["src"][i]),
+                           "id": seq, "cat": "transfer", "name": "xfer",
+                           "ts": dec["created_t"][i] * _US, "args": args})
+            events.append({**_base(dec, i, "f"), "bp": "e", "id": seq,
+                           "cat": "transfer", "name": "xfer",
+                           "ts": dec["completed_t"][i] * _US})
+    return events
+
+
+def write_chrome_trace(path: str, dec: Mapping) -> str:
+    """Write ``{"traceEvents": [...]}`` JSON; returns ``path``."""
+    doc = {"traceEvents": chrome_trace_events(dec),
+           "displayTimeUnit": "ms",
+           "otherData": {"schema": list(schema.FIELDS)}}
+    with open(path, "w") as f:
+        json.dump(doc, f)
+    return path

@@ -1,0 +1,104 @@
+"""In-scan TaskRecord capture (DESIGN.md §10.2).
+
+A fixed-capacity record buffer rides in the simulator's scan carry; every
+task completion (and queue-full drop) scatters one :mod:`schema` row into
+it, keyed by the task's global sequence number from ``swarm/queues.py``.
+Because each seq finishes exactly once, slot ``seq`` is written at most
+once — the scatter is order-independent, so records are bit-identical
+across ``vmap`` / ``shard_map`` / ``lax.map`` executor backends.  Records
+whose seq exceeds the capacity are *dropped from capture* (out-of-bounds
+scatter with ``mode="drop"``) and counted in a saturating overflow
+counter: the buffer never wraps, decode is unambiguous, and
+``trace_overflow`` tells you exactly how many task records were lost —
+size ``SwarmConfig.trace_capacity`` above the expected task count to
+capture everything.  No host callbacks anywhere: the whole path jits.
+
+Attribution state carried alongside the queues (all trace-only — absent
+when ``trace_capacity == 0``):
+
+  * ``q_src`` / ``q_energy`` / ``q_txtime`` — per queue slot: generating
+    node, energy attributed so far (compute J + transfer J), cumulative
+    time in flight;
+  * ``tx_src`` / ``tx_energy`` / ``tx_txtime`` — the same, for the
+    in-flight outgoing transfer of each node.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import SwarmConfig
+from repro.trace import schema
+
+
+def enabled(cfg: SwarmConfig) -> bool:
+    return cfg.trace_capacity > 0
+
+
+def init_trace(cfg: SwarmConfig, n: int) -> dict:
+    """Trace-state entries for ``init_state`` — ``{}`` when tracing is off,
+    so the untraced state pytree is unchanged field-for-field."""
+    if not enabled(cfg):
+        return {}
+    Q = cfg.queue_slots
+    return {
+        "trace_records": schema.empty_buffer(cfg.trace_capacity),
+        "trace_overflow": jnp.int32(0),
+        "q_src": jnp.zeros((n, Q), jnp.int32),
+        "q_energy": jnp.zeros((n, Q), jnp.float32),
+        "q_txtime": jnp.zeros((n, Q), jnp.float32),
+        "tx_src": jnp.zeros((n,), jnp.int32),
+        "tx_energy": jnp.zeros((n,), jnp.float32),
+        "tx_txtime": jnp.zeros((n,), jnp.float32),
+    }
+
+
+def write_records(st, mask, *, seq, src, dst, created_t, completed_t,
+                  exit_label, layers, hops, energy_j, tx_time_s):
+    """Scatter one record per ``mask`` lane into the buffer at slot ``seq``.
+
+    Lanes with ``~mask`` (and captured-but-overflowed seqs) target slot
+    ``capacity`` — out of bounds, dropped by the scatter mode — so the
+    kept rows are deterministic regardless of lane order.
+    """
+    cap = st["trace_records"].shape[0]
+    rows = schema.pack(seq, src, dst, created_t, completed_t, exit_label,
+                       layers, hops, energy_j, tx_time_s)
+    slot = jnp.where(mask, seq, cap)
+    st = dict(st)
+    st["trace_records"] = st["trace_records"].at[slot].set(rows,
+                                                           mode="drop")
+    # saturate at int32 max instead of wrapping (clamp the increment to
+    # the remaining headroom — int32-only, no x64 dependence)
+    inc = jnp.sum(mask & (seq >= cap)).astype(jnp.int32)
+    room = jnp.int32(jnp.iinfo(jnp.int32).max) - st["trace_overflow"]
+    st["trace_overflow"] = st["trace_overflow"] + jnp.minimum(inc, room)
+    return st
+
+
+def traced_push(st, mask, cum, created, visited, *, src, energy, txtime,
+                t_now, cfg: SwarmConfig):
+    """``queues.push`` plus attribution carry and drop records.
+
+    Tasks that find no free slot are dropped by ``push`` (counted in
+    ``drop_count``); under tracing they additionally consume a seq — the
+    record keyspace covers every task that ever *finished*, completed or
+    not — and scatter a ``DROPPED`` record stamped at ``t_now``.
+    """
+    from repro.swarm.queues import push      # deferred: queues ↔ trace
+
+    n = st["q_active"].shape[0]
+    has_free = ~jnp.all(st["q_active"], axis=1)
+    dropped = mask & ~has_free
+    st = push(st, mask, cum, created, visited,
+              extras={"src": src, "energy": energy, "txtime": txtime})
+    # seqs for the drops, after push consumed the accepted tasks' seqs
+    drop_seq = st["seq_counter"] + jnp.cumsum(dropped.astype(jnp.int32)) - 1
+    st = dict(st)
+    st["seq_counter"] = st["seq_counter"] + jnp.sum(
+        dropped.astype(jnp.int32))
+    return write_records(
+        st, dropped, seq=drop_seq, src=src, dst=jnp.arange(n),
+        created_t=created, completed_t=t_now,
+        exit_label=jnp.int32(schema.DROPPED), layers=jnp.int32(0),
+        hops=jnp.sum(visited, axis=-1), energy_j=energy,
+        tx_time_s=txtime)

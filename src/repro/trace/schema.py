@@ -1,0 +1,66 @@
+"""TaskRecord layout (DESIGN.md §10.1).
+
+One task = one fixed-width float32 row.  A packed row (rather than a
+struct-of-arrays dict) keeps the in-scan buffer a single carry leaf that
+every executor backend batches/concatenates/checkpoints without special
+cases, and makes the record vocabulary trivially shareable with the
+serving stack (``splitcompute.ServeStats`` builds the same rows on host).
+
+Fields (float32; integral fields are exact up to 2^24, far above any
+realistic seq/node/layer count):
+
+  ==============  =========================================================
+  ``seq``         global task sequence number at the task's *last* enqueue
+                  (``queues.py`` re-seqs on every hop; ``created_t`` still
+                  spans the whole lifetime).  < 0 marks an unwritten slot.
+  ``src``         node that generated the task (serve: entry stage)
+  ``dst``         node that completed/dropped it (serve: exit stage)
+  ``created_t``   generation time, simulation seconds
+  ``completed_t`` completion/drop time, simulation seconds
+  ``exit_label``  0 full / 1 medium / 2 high congestion exit, 3 = dropped
+  ``layers``      layers executed at completion (0 for drops)
+  ``hops``        |visited set| — distinct nodes that forwarded the task
+  ``energy_j``    compute + transfer energy attributed to the task
+  ``tx_time_s``   total time the task spent in flight between nodes
+  ==============  =========================================================
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+FIELDS = ("seq", "src", "dst", "created_t", "completed_t", "exit_label",
+          "layers", "hops", "energy_j", "tx_time_s")
+(SEQ, SRC, DST, CREATED_T, COMPLETED_T, EXIT_LABEL, LAYERS, HOPS, ENERGY_J,
+ TX_TIME_S) = range(len(FIELDS))
+NUM_FIELDS = len(FIELDS)
+
+# exit_label values beyond the paper's 0/1/2 congestion ladder
+DROPPED = 3
+
+INT_FIELDS = ("seq", "src", "dst", "exit_label", "layers", "hops")
+
+
+def pack(seq, src, dst, created_t, completed_t, exit_label, layers, hops,
+         energy_j, tx_time_s) -> jnp.ndarray:
+    """Stack per-task field vectors into ``[..., NUM_FIELDS]`` f32 rows."""
+    cols = (seq, src, dst, created_t, completed_t, exit_label, layers, hops,
+            energy_j, tx_time_s)
+    return jnp.stack([jnp.asarray(c, jnp.float32) for c in
+                      jnp.broadcast_arrays(*cols)], axis=-1)
+
+
+def pack_np(seq, src, dst, created_t, completed_t, exit_label, layers, hops,
+            energy_j=0.0, tx_time_s=0.0) -> np.ndarray:
+    """Host-side single-record row (serving stack).
+
+    float64: host records never ride in a device carry, so there is no
+    reason to round the caller's clock domain through float32.
+    """
+    return np.asarray([seq, src, dst, created_t, completed_t, exit_label,
+                       layers, hops, energy_j, tx_time_s], np.float64)
+
+
+def empty_buffer(capacity: int) -> jnp.ndarray:
+    """Unwritten ``[capacity, NUM_FIELDS]`` buffer (seq = -1 everywhere)."""
+    return jnp.full((capacity, NUM_FIELDS), -1.0, jnp.float32)

@@ -29,7 +29,7 @@ def test_registry_roundtrip():
     assert set(MOBILITY_MODELS) == {"circular", "random_waypoint",
                                     "gauss_markov", "levy_flight"}
     assert set(CHANNEL_MODELS) == {"two_ray", "free_space", "log_normal",
-                                   "rician", "nakagami"}
+                                   "log_normal_corr", "rician", "nakagami"}
     assert set(FAULT_MODELS) == {"none", "markov"}
     for name in MOBILITY_MODELS:
         cfg = dataclasses.replace(SwarmConfig(), mobility_model=name)
@@ -110,7 +110,7 @@ def test_stepped_mobility_epoch0_returns_initial_placement(name):
 
 
 @pytest.mark.parametrize("name", ["two_ray", "free_space", "log_normal",
-                                  "rician", "nakagami"])
+                                  "log_normal_corr", "rician", "nakagami"])
 def test_channel_link_state_contract(name):
     cfg = dataclasses.replace(SwarmConfig(), channel_model=name)
     pos = jax.random.uniform(KEY, (N, 2), jnp.float32, 0.0, cfg.area_m)
@@ -132,7 +132,8 @@ def test_deterministic_pathloss_monotone_in_distance(name):
     assert np.all(np.diff(pl) > 0)
 
 
-@pytest.mark.parametrize("name", ["log_normal", "rician", "nakagami"])
+@pytest.mark.parametrize("name", ["log_normal", "log_normal_corr", "rician",
+                                  "nakagami"])
 def test_stochastic_channel_varies_with_key_but_not_baseline(name):
     cfg = SwarmConfig()
     fn = CHANNEL_MODELS[name]
@@ -159,6 +160,41 @@ def test_fading_gain_is_unit_mean_around_log_distance_baseline(name):
     off = ~np.eye(n, dtype=bool)
     assert abs(g[off].mean() - 1.0) < 0.05
     assert g[off].std() > 0.05                           # it does fade
+
+
+def test_correlated_shadowing_follows_gudmundson_decorrelation():
+    """log_normal_corr contract: links between distinct endpoint pairs are
+    strongly correlated when the endpoints sit within the decorrelation
+    distance and (near-)independent far outside it, while every link keeps
+    the iid model's marginal N(0, σ²)."""
+    import dataclasses as dc
+    from repro.swarm.channel import _log_distance_db, pairwise_distance
+
+    # two tight clusters 5 km apart: {0,1} and {2,3}, 10 m inside a cluster
+    pos = jnp.asarray([[0.0, 0.0], [10.0, 0.0],
+                       [5_000.0, 0.0], [5_010.0, 0.0]], jnp.float32)
+    dist = pairwise_distance(pos)
+    base = np.asarray(_log_distance_db(dist, SwarmConfig()))
+    fn = CHANNEL_MODELS["log_normal_corr"]
+
+    def shadow_samples(corr_m, n_keys=400):
+        cfg = dc.replace(SwarmConfig(), shadow_corr_m=corr_m)
+        x01, x23 = [], []
+        for i in range(n_keys):
+            x = np.asarray(fn(jax.random.PRNGKey(i), dist, cfg)) - base
+            # links (0,2) and (1,3): no shared endpoint
+            x01.append(x[0, 2])
+            x23.append(x[1, 3])
+        return np.asarray(x01), np.asarray(x23)
+
+    a, b = shadow_samples(corr_m=50_000.0)     # swarm-scale correlation
+    corr_near = np.corrcoef(a, b)[0, 1]
+    assert corr_near > 0.8, corr_near          # clustered endpoints co-shadow
+    a, b = shadow_samples(corr_m=1.0)          # decorrelated regime
+    corr_far = np.corrcoef(a, b)[0, 1]
+    assert abs(corr_far) < 0.3, corr_far
+    # exact marginal: every off-diagonal link keeps std sigma
+    assert abs(a.std() - SwarmConfig().shadowing_sigma_db) < 1.0
 
 
 def test_nakagami_concentrates_with_large_m():

@@ -1,0 +1,294 @@
+"""Per-task telemetry tests (DESIGN.md §10): trace-off invariance, record
+accounting against the scalar accumulators, bit-identical records across
+all three executor backends, kill/resume preservation through the store
+(SweepInterrupted and a real SIGKILL'd spawned worker), overflow
+semantics, report/export surfaces, and the shared-schema serve stats.
+"""
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SwarmConfig
+from repro.fleet import (ResultStore, SweepInterrupted, SweepSpec,
+                         build_report, collect, dispatch, execute,
+                         point_digest, read_progress, run_batch, run_point,
+                         spawn_workers, write_bench_json)
+from repro.swarm import DISTRIBUTED, run_many
+from repro.trace import (chrome_trace_events, decode, schema, split_runs,
+                         trace_indices, write_chrome_trace)
+
+KEY = jax.random.PRNGKey(0)
+N, RUNS = 8, 6
+CFG = dataclasses.replace(SwarmConfig(), sim_time_s=2.0, num_workers=N)
+CFG_TR = dataclasses.replace(CFG, trace_capacity=512)
+SPEC_KILL = SweepSpec.build(
+    "tracekill", dataclasses.replace(CFG, sim_time_s=1.0, num_workers=6,
+                                     trace_capacity=256),
+    axes={"gamma": (0.02, 0.1)}, strategies=(0, 4), num_runs=3)
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _pinned_code_version():
+    """Digests must agree with spawned workers and not drift mid-run."""
+    from repro.fleet.store import code_version
+    old = os.environ.get("REPRO_CODE_VERSION")
+    os.environ["REPRO_CODE_VERSION"] = "test-trace"
+    code_version.cache_clear()
+    yield
+    if old is None:
+        del os.environ["REPRO_CODE_VERSION"]
+    else:
+        os.environ["REPRO_CODE_VERSION"] = old
+    code_version.cache_clear()
+
+
+def _np(tree):
+    return {k: np.asarray(v) for k, v in tree.items()}
+
+
+@pytest.fixture(scope="module")
+def traced():
+    return _np(run_batch(KEY, CFG_TR, jnp.int32(DISTRIBUTED), N, RUNS))
+
+
+@pytest.fixture(scope="module")
+def untraced():
+    return _np(run_batch(KEY, CFG, jnp.int32(DISTRIBUTED), N, RUNS))
+
+
+# ---------------------------------------------------------------------------
+# trace off == historical simulator; trace on perturbs nothing
+# ---------------------------------------------------------------------------
+
+
+def test_capacity_zero_emits_no_trace_state(untraced):
+    assert not any(k.startswith("trace_") for k in untraced)
+
+
+def test_tracing_does_not_perturb_metrics(traced, untraced):
+    """Capturing records must be observation, not intervention: every
+    scalar metric of a traced run is bit-identical to the untraced run."""
+    for k in untraced:
+        np.testing.assert_array_equal(traced[k], untraced[k], err_msg=k)
+
+
+# ---------------------------------------------------------------------------
+# record accounting vs the scalar accumulators
+# ---------------------------------------------------------------------------
+
+
+def test_records_account_for_every_finished_task(traced):
+    dec = decode(traced["trace_records"], traced["trace_overflow"])
+    finished = traced["completed"].sum() + traced["dropped"].sum()
+    assert dec["seq"].size + int(dec["overflow"]) == int(finished)
+    done = ~dec["is_dropped"]
+    assert int(done.sum()) == int(traced["completed"].sum())
+    assert int(dec["is_dropped"].sum()) == int(traced["dropped"].sum())
+    # per-record latencies reproduce the scalar accumulator sum
+    lat_sum_metrics = float((traced["avg_latency_s"]
+                             * traced["completed"]).sum())
+    assert np.isclose(dec["latency_s"][done].sum(), lat_sum_metrics,
+                      rtol=1e-4)
+    # records are scatter-by-seq: in-run seqs are unique and slot-ordered
+    for run in split_runs(traced["trace_records"]):
+        assert np.all(np.diff(run["seq"]) > 0)
+
+
+def test_record_fields_are_physical(traced):
+    dec = decode(traced["trace_records"], traced["trace_overflow"])
+    assert np.all(dec["completed_t"] >= dec["created_t"])
+    assert np.all((dec["src"] >= 0) & (dec["src"] < N))
+    assert np.all((dec["dst"] >= 0) & (dec["dst"] < N))
+    assert np.all(dec["hops"] >= 0) and np.all(dec["hops"] < N)
+    assert np.all(dec["energy_j"] >= 0) and np.all(dec["tx_time_s"] >= 0)
+    done = ~dec["is_dropped"]
+    assert np.all(dec["exit_label"][done] <= 2)
+    assert np.all(dec["layers"][done] > 0)
+    # a task that never moved has zero transfer time; a forwarded one, > 0
+    assert np.all(dec["tx_time_s"][dec["hops"] == 0] == 0.0)
+    moved = done & (dec["hops"] > 0)
+    if moved.any():
+        assert np.all(dec["tx_time_s"][moved] > 0.0)
+        assert np.any(dec["src"][moved] != dec["dst"][moved])
+
+
+def test_overflow_counter_saturates_capture_exactly():
+    """Completions beyond trace_capacity are dropped from capture (never
+    wrapped over earlier records) and counted exactly."""
+    cap = 16
+    cfg = dataclasses.replace(CFG_TR, trace_capacity=cap)
+    m = _np(run_batch(KEY, cfg, jnp.int32(DISTRIBUTED), N, 3))
+    dec = decode(m["trace_records"], m["trace_overflow"])
+    finished = m["completed"].sum() + m["dropped"].sum()
+    assert int(dec["overflow"]) > 0
+    assert dec["seq"].size + int(dec["overflow"]) == int(finished)
+    assert np.all(dec["seq"] < cap)          # kept records: first seqs only
+    # the captured prefix agrees with the uncapped run, record for record
+    full = _np(run_batch(KEY, CFG_TR, jnp.int32(DISTRIBUTED), N, 3))
+    for small, big in zip(split_runs(m["trace_records"]),
+                          split_runs(full["trace_records"])):
+        keep = big["seq"] < cap
+        for f in schema.FIELDS:
+            np.testing.assert_array_equal(small[f], big[f][keep],
+                                          err_msg=f)
+
+
+# ---------------------------------------------------------------------------
+# acceptance: records bit-identical across all three executor backends
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend,kw", [("sharded", {}),
+                                        ("streaming", {"chunk_size": 4})])
+def test_records_bit_identical_across_backends(traced, backend, kw):
+    got = _np(run_batch(KEY, CFG_TR, jnp.int32(DISTRIBUTED), N, RUNS,
+                        backend=backend, **kw))
+    np.testing.assert_array_equal(got["trace_records"],
+                                  traced["trace_records"])
+    np.testing.assert_array_equal(got["trace_overflow"],
+                                  traced["trace_overflow"])
+
+
+def test_run_many_carries_records(traced):
+    got = _np(run_many(KEY, CFG_TR, jnp.int32(DISTRIBUTED), N, RUNS))
+    np.testing.assert_array_equal(got["trace_records"],
+                                  traced["trace_records"])
+
+
+# ---------------------------------------------------------------------------
+# store/resume: records survive interrupts and SIGKILL'd workers
+# ---------------------------------------------------------------------------
+
+
+def test_interrupted_streaming_sweep_preserves_records(tmp_path, traced):
+    spec = SweepSpec.build("traceresume", CFG_TR,
+                           strategies=(DISTRIBUTED,), num_runs=RUNS)
+    (pt,) = spec.expand()
+    store = ResultStore(str(tmp_path))
+    with pytest.raises(SweepInterrupted):
+        run_point(pt, backend="streaming", store=store, chunk_size=2,
+                  max_chunks=1)
+    # the partial checkpoint round-trips the [runs, capacity, F] buffer
+    done, accum = store.load_partial(point_digest(pt))
+    assert done == 1
+    assert accum["trace_records"].shape == (2, 512, schema.NUM_FIELDS)
+    resumed = run_point(pt, backend="streaming", store=store, chunk_size=2)
+    np.testing.assert_array_equal(resumed["trace_records"],
+                                  traced["trace_records"])
+    # the store hit trims only trailing unwritten slots (JSON compaction):
+    # every written record survives the round-trip bit-for-bit
+    hit = run_point(pt, backend="vmap", store=store)
+    assert hit["trace_records"].shape[1] <= traced["trace_records"].shape[1]
+    dh, dt = decode(hit["trace_records"]), decode(traced["trace_records"])
+    for f in schema.FIELDS:
+        np.testing.assert_array_equal(dh[f], dt[f], err_msg=f)
+
+
+def _bench_bytes(path, res):
+    write_bench_json(path, "sweep:cmp", build_report(res))
+    with open(path, "rb") as f:
+        return f.read()
+
+
+def test_sigkilled_traced_dispatch_resumes_to_identical_report(tmp_path):
+    """A traced sweep whose worker is SIGKILL'd mid-run redispatches to a
+    BENCH report byte-identical to an uninterrupted single-process run —
+    task-level CDFs included."""
+    ref = _bench_bytes(str(tmp_path / "ref.json"), execute(SPEC_KILL))
+    assert b"task_latency_cdf_s" in ref
+    store = ResultStore(str(tmp_path / "cache"))
+    prog = str(tmp_path / "progress.jsonl")
+    (proc,) = spawn_workers(SPEC_KILL, store.root, 1, lease_ttl_s=2.0,
+                            progress_path=prog)
+    try:
+        deadline = time.time() + 300
+        while time.time() < deadline:
+            if any(r.get("event") == "point"
+                   for r in read_progress(prog)):
+                break
+            assert proc.is_alive(), "worker died before first point"
+            time.sleep(0.05)
+        else:
+            pytest.fail("worker produced no point within 300s")
+        proc.kill()
+    finally:
+        proc.join()
+    with pytest.raises(RuntimeError, match="redispatch to resume"):
+        collect(SPEC_KILL, store)
+    res = dispatch(SPEC_KILL, store, workers=2, lease_ttl_s=2.0,
+                   progress_path=prog)
+    assert _bench_bytes(str(tmp_path / "resumed.json"), res) == ref
+
+
+# ---------------------------------------------------------------------------
+# report + timeline export surfaces
+# ---------------------------------------------------------------------------
+
+
+def test_report_feeds_task_cdf_from_records(traced, untraced):
+    doc = build_report({"pt": traced})["points"]["pt"]
+    assert "trace_records" not in doc       # buffers aggregated, not dumped
+    cdf = doc["task_latency_cdf_s"]
+    dec = decode(traced["trace_records"])
+    lat = dec["latency_s"][~dec["is_dropped"]]
+    assert cdf["p50"] == pytest.approx(float(np.quantile(lat, 0.5)))
+    assert doc["task_count"] == int(traced["completed"].sum())
+    assert 0.0 < doc["task_latency_jain"] <= 1.0
+    # untraced points keep the PR 3 shape: no task-level section at all
+    doc0 = build_report({"pt": untraced})["points"]["pt"]
+    assert not any(k.startswith("task_") for k in doc0)
+
+
+def test_chrome_trace_export_is_valid_and_complete(tmp_path, traced):
+    dec = split_runs(traced["trace_records"],
+                     traced["trace_overflow"])[0]
+    path = write_chrome_trace(str(tmp_path / "t.json"), dec)
+    with open(path) as f:
+        doc = json.load(f)                  # validates as JSON
+    ev = doc["traceEvents"]
+    slices = [e for e in ev if e["ph"] == "X"]
+    drops = [e for e in ev if e["ph"] == "i"]
+    assert len(slices) == int((~dec["is_dropped"]).sum())
+    assert len(drops) == int(dec["is_dropped"].sum())
+    assert all(e["dur"] >= 0 and e["ts"] >= 0 for e in slices)
+    # every forwarded task draws a src → dst flow arrow
+    flows = [e for e in ev if e["ph"] in ("s", "f")]
+    moved = int(((dec["hops"] > 0) & ~dec["is_dropped"]).sum())
+    assert len(flows) == 2 * moved
+
+
+def test_serve_stats_share_the_task_record_schema():
+    """ServeStats rows decode through the same repro.trace pipeline as the
+    simulator's in-scan records."""
+    from repro.splitcompute.serve_engine import ServeStats
+    st = ServeStats()
+    st.record(seq=0, src=0, dst=1, created_t=0.0, completed_t=0.4,
+              exit_label=1, layers=8, hops=1, count=2)
+    st.record(seq=1, src=0, dst=0, created_t=0.1, completed_t=0.2,
+              exit_label=0, layers=16, hops=0)
+    assert st.records.shape == (3, schema.NUM_FIELDS)
+    assert (st.completed, st.exit_counts) == (3, {0: 1, 1: 2, 2: 0})
+    assert st.latency_sum == pytest.approx(0.4 * 2 + 0.1)
+    dec = decode(st.records)
+    idx = trace_indices(dec)
+    assert idx["task_count"] == 3 and idx["dropped_count"] == 0
+    assert idx["exit_label_histogram"] == {"0": 1, "1": 2}
+    events = chrome_trace_events(dec)
+    assert sum(e["ph"] == "X" for e in events) == 3
+    # labels outside the 0/1/2 ladder (shared vocabulary) must not crash
+    st.record(seq=2, src=0, dst=0, created_t=0.5, completed_t=0.5,
+              exit_label=schema.DROPPED, layers=0, hops=0)
+    assert st.exit_counts[schema.DROPPED] == 1 and st.completed == 4
+    # bounded capture: counters keep counting past max_records
+    st2 = ServeStats(max_records=1)
+    for i in range(3):
+        st2.record(seq=i, src=0, dst=0, created_t=0.0, completed_t=1.0,
+                   exit_label=0, layers=1, hops=0)
+    assert (st2.completed, len(st2.records), st2.record_overflow) == (3, 1, 2)
+    assert st2.latency_sum == pytest.approx(3.0)

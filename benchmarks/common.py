@@ -20,6 +20,11 @@ aggregate indices into ``artifacts/BENCH_fleet.json``.  Env knobs:
                             SwarmConfig.trace_capacity = C (run.py --trace
                             sets it), so BENCH_fleet.json sections gain the
                             task-level indices (task_latency_cdf_s, …)
+  REPRO_FLEET_TRACE_HOPS=C  per-hop telemetry: SwarmConfig.trace_hop_capacity
+                            = C (run.py --trace-hops sets it) — BENCH
+                            sections additionally gain the hop-resolved
+                            indices (per-hop transfer-time / link-bits
+                            quantiles, queue-wait vs in-flight)
   REPRO_FULL_RUNS=1         the paper's 50 Monte-Carlo runs (default 16)
 
 Multi-host mode: with the ``REPRO_FLEET_*`` rank/world env contract set
@@ -69,18 +74,25 @@ def default_workers() -> int:
 
 
 def apply_trace_env(spec: SweepSpec) -> SweepSpec:
-    """Fold the ``REPRO_FLEET_TRACE`` capacity into a sweep's base config.
+    """Fold the ``REPRO_FLEET_TRACE`` / ``REPRO_FLEET_TRACE_HOPS``
+    capacities into a sweep's base config.
 
-    Tracing is part of the point identity (the capacity is in the config
-    digest), so traced and untraced results never alias in the store; with
-    the knob unset the spec is returned untouched and every emitted byte
-    matches an untraced build.
+    Tracing is part of the point identity (the capacities are in the
+    config digest), so traced and untraced results never alias in the
+    store; with the knobs unset the spec is returned untouched and every
+    emitted byte matches an untraced build.
     """
+    over = {}
     cap = int(os.environ.get("REPRO_FLEET_TRACE", "0"))
-    if cap <= 0 or spec.base.trace_capacity > 0:
+    if cap > 0 and spec.base.trace_capacity == 0:
+        over["trace_capacity"] = cap
+    hop_cap = int(os.environ.get("REPRO_FLEET_TRACE_HOPS", "0"))
+    if hop_cap > 0 and spec.base.trace_hop_capacity == 0:
+        over["trace_hop_capacity"] = hop_cap
+    if not over:
         return spec
     return dataclasses.replace(
-        spec, base=dataclasses.replace(spec.base, trace_capacity=cap))
+        spec, base=dataclasses.replace(spec.base, **over))
 
 
 def fleet_sweep(spec: SweepSpec, backend: Optional[str] = None,
@@ -117,7 +129,10 @@ def fleet_sweep(spec: SweepSpec, backend: Optional[str] = None,
         write_bench_json(
             BENCH_JSON, f"sweep:{spec.name}",
             build_report(res, meta={"backend": backend,
-                                    "num_runs": spec.num_runs}))
+                                    "num_runs": spec.num_runs},
+                         # per point: a sweep axis may override tick_s
+                         tick_s={pt.label: pt.cfg.tick_s
+                                 for pt in spec.expand()}))
     return res
 
 

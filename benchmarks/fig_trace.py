@@ -1,0 +1,100 @@
+"""Trace-driven figure exports (DESIGN.md §10.6): Fig. 4a per-task latency
+CDF *overlays* and hop/exit histograms, computed from stored in-scan
+records instead of run means.
+
+The figure sweeps (fig3-7) report mean ± CI per point; Fig. 4a's actual
+artifact is a per-task CDF overlay — one curve per strategy on a shared
+axis.  This exporter runs (or cache-hits, through the content-addressed
+store) one traced sweep over the strategies and emits:
+
+  * ``fig4a_task_cdf.csv`` — shared CDF-fraction grid in column 0, one
+    latency column per strategy: each row is "the p-th per-task latency
+    quantile of every strategy", directly plottable as overlaid CDFs;
+  * ``fig_trace_hist.csv`` — long-form ``label,kind,bin,count`` rows for
+    the task hop histogram, the exit-label histogram and (when the hop
+    stream is on) the per-hop boundary-layer histogram — the paper's
+    hop/exit decompositions from real samples.
+
+Both files come from record buffers that ride the normal fleet path, so
+a cache hit, a resumed sweep or a multi-worker dispatch emit identical
+bytes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+
+import numpy as np
+
+from benchmarks.common import ART, DEFAULT_RUNS, fleet_sweep, write_csv
+from repro.configs.base import SwarmConfig
+from repro.fleet import SweepSpec
+from repro.trace import (decode, decode_hops, exit_label_histogram,
+                         hop_histogram, int_histogram)
+
+DEFAULT_CAPACITY = 65536
+CDF_GRID = tuple(i / 100.0 for i in range(0, 101, 2))   # 51 fractions
+
+
+def run(n=30, runs=DEFAULT_RUNS, strategies=(0, 1, 2, 3, 4),
+        sim_time=None, trace_capacity=None, hop_capacity=None):
+    """Traced strategy sweep → Fig. 4a overlay CSV + histogram CSV.
+
+    Capacities default from the ``REPRO_FLEET_TRACE[_HOPS]`` env knobs
+    (``run.py --trace [--trace-hops]``), falling back to 65536 for the
+    task stream so the exporter works standalone; the hop stream stays
+    off unless requested.
+    """
+    if trace_capacity is None:
+        trace_capacity = int(os.environ.get("REPRO_FLEET_TRACE", "0")) \
+            or DEFAULT_CAPACITY
+    if hop_capacity is None:
+        hop_capacity = int(os.environ.get("REPRO_FLEET_TRACE_HOPS", "0"))
+    cfg = dataclasses.replace(
+        SwarmConfig(), num_workers=n, trace_capacity=trace_capacity,
+        trace_hop_capacity=hop_capacity,
+        **({"sim_time_s": sim_time} if sim_time else {}))
+    spec = SweepSpec.build("fig_trace", cfg, strategies=tuple(strategies),
+                           num_runs=runs)
+    res = fleet_sweep(spec)
+    if not res:
+        return []    # non-zero rank of a multi-host dispatch: worker only
+
+    labels, cols, hist_rows = [], [], []
+    for pt in spec.expand():
+        m = res[pt.label]
+        dec = decode(m["trace_records"], m.get("trace_overflow"))
+        done = ~dec["is_dropped"]
+        lat = np.sort(dec["latency_s"][done])
+        labels.append(pt.label.split("strategy=")[-1])
+        cols.append([float(np.quantile(lat, q)) if lat.size else ""
+                     for q in CDF_GRID])
+        for kind, hist in (("task_hops", hop_histogram(dec)),
+                           ("exit_label", exit_label_histogram(dec))):
+            hist_rows += _hist_rows(labels[-1], kind, hist)
+        if "trace_hops" in m:
+            hdec = decode_hops(m["trace_hops"],
+                               m.get("trace_hop_overflow"))
+            hist_rows += _hist_rows(labels[-1], "hop_boundary_layer",
+                                    int_histogram(hdec["boundary_layer"]))
+        print(f"fig_trace: {pt.label} tasks={int(done.sum())} "
+              f"dropped={int(dec['is_dropped'].sum())}"
+              + (f" hops={len(hdec['seq'])}" if "trace_hops" in m else ""))
+
+    rows = [[f"{q:.2f}"] + [c[i] for c in cols]
+            for i, q in enumerate(CDF_GRID)]
+    write_csv(os.path.join(ART, "fig4a_task_cdf.csv"),
+              "cdf," + ",".join(labels), rows)
+    write_csv(os.path.join(ART, "fig_trace_hist.csv"),
+              "strategy,kind,bin,count", hist_rows)
+    return rows
+
+
+def _hist_rows(label, kind, hist):
+    """Long-form CSV rows from a string-keyed ``int_histogram`` dict."""
+    return [[label, kind, int(b), c]
+            for b, c in sorted(hist.items(), key=lambda kv: int(kv[0]))]
+
+
+if __name__ == "__main__":
+    run()

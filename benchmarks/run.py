@@ -13,7 +13,14 @@ Flags:
                 (``SwarmConfig.trace_capacity = C``, default 65536): each
                 sweep's BENCH_fleet.json section gains the task-level
                 indices (``task_latency_cdf_s``, hop/exit histograms,
-                energy per task) computed from in-scan TaskRecords
+                energy per task) computed from in-scan TaskRecords, and a
+                trace-driven figure pass (``fig_trace``) emits the
+                Fig. 4a per-task CDF overlay CSV
+  --trace-hops [C]  additionally capture the per-hop stream
+                (``SwarmConfig.trace_hop_capacity = C``, default 65536):
+                BENCH sections gain hop-resolved indices (per-hop
+                transfer-time / link-bits quantiles, queue-wait vs
+                in-flight decomposition)
   --watch [p]   don't run benchmarks: follow a progress.jsonl (default
                 ``artifacts/progress.jsonl``) and render completed/total,
                 points/min and ETA for the sweep currently running —
@@ -87,6 +94,13 @@ def run_benchmarks() -> None:
                       else fig_scenarios.SCENARIOS,
                       sim_time=10.0 if FAST else 20.0, **kw)
 
+    if int(os.environ.get("REPRO_FLEET_TRACE", "0")) > 0:
+        print("\n== Trace-driven figures: Fig. 4a per-task CDF overlay ==")
+        from benchmarks import fig_trace
+        fig_trace.run(n=10 if FAST else 30,
+                      strategies=(0, 4) if FAST else (0, 1, 2, 3, 4),
+                      sim_time=5.0 if FAST else None, **kw)
+
     if rank0:
         print("\n== Ablation (ours): arrival burstiness ==")
         from benchmarks import ablation_burst
@@ -107,7 +121,13 @@ def main(argv=None) -> None:
                     type=int, metavar="CAPACITY",
                     help="per-task telemetry: run sweeps with "
                          "SwarmConfig.trace_capacity=CAPACITY (default "
-                         "65536) so BENCH sections gain task-level CDFs")
+                         "65536) so BENCH sections gain task-level CDFs, "
+                         "and emit the Fig. 4a overlay CSV (fig_trace)")
+    ap.add_argument("--trace-hops", nargs="?", const=65536, default=None,
+                    type=int, metavar="CAPACITY",
+                    help="per-hop telemetry: SwarmConfig.trace_hop_capacity"
+                         "=CAPACITY (default 65536) — BENCH sections gain "
+                         "hop-resolved transfer indices")
     ap.add_argument("--watch", nargs="?", const=PROGRESS_JSONL, default=None,
                     metavar="PROGRESS_JSONL",
                     help="follow a progress file instead of running "
@@ -123,6 +143,8 @@ def main(argv=None) -> None:
         os.environ["REPRO_FLEET_WORKERS"] = str(args.workers)
     if args.trace is not None:
         os.environ["REPRO_FLEET_TRACE"] = str(args.trace)
+    if args.trace_hops is not None:
+        os.environ["REPRO_FLEET_TRACE_HOPS"] = str(args.trace_hops)
     run_benchmarks()
 
 

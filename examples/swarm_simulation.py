@@ -20,9 +20,11 @@ numbers, point axis parallel.
 
 ``--trace out.json`` additionally runs one per-task-telemetry simulation
 of the Distributed strategy (``repro.trace``, DESIGN.md §10): prints the
-task-level latency CDF / hop / exit-label indices and writes a
-Chrome-trace/Perfetto timeline of every task lifetime and net transfer —
-load it at https://ui.perfetto.dev or chrome://tracing.
+task-level latency CDF / hop / exit-label indices plus the hop-resolved
+transfer decomposition, and writes a Chrome-trace/Perfetto timeline with
+one slice + flow arrow per *hop* (queue-wait tails on the visited nodes'
+tracks) — load it at https://ui.perfetto.dev or chrome://tracing.
+``--trace-hops 0`` drops back to task records only (net src→dst arrows).
 """
 import argparse
 import dataclasses
@@ -77,6 +79,11 @@ def main():
     ap.add_argument("--trace-capacity", type=int, default=65536,
                     help="TaskRecord slots for --trace (records beyond "
                          "this count as overflow)")
+    ap.add_argument("--trace-hops", type=int, default=65536,
+                    metavar="CAPACITY",
+                    help="HopRecord slots for --trace (one record per "
+                         "delivered transfer; 0 disables the hop stream "
+                         "and falls back to net src->dst arrows)")
     args = ap.parse_args()
 
     key = jax.random.PRNGKey(0)
@@ -94,9 +101,11 @@ def main():
     cfg_ee = dataclasses.replace(cfg, early_exit_enabled=True)
 
     if args.trace:
-        from repro.trace import decode, trace_indices, write_chrome_trace
+        from repro.trace import (decode, decode_hops, hop_indices,
+                                 trace_indices, write_chrome_trace)
         cfg_tr = dataclasses.replace(cfg,
-                                     trace_capacity=args.trace_capacity)
+                                     trace_capacity=args.trace_capacity,
+                                     trace_hop_capacity=args.trace_hops)
         m = run_batch(key, cfg_tr, jnp.int32(4), args.workers, 1)
         dec = decode(np.asarray(m["trace_records"]),
                      np.asarray(m["trace_overflow"]))
@@ -105,14 +114,28 @@ def main():
               f"capacity {args.trace_capacity}):")
         print(f"  tasks={idx['task_count']} dropped={idx['dropped_count']} "
               f"overflow={idx['trace_overflow']}")
-        if "task_latency_cdf_s" in idx:
+        if idx["task_latency_cdf_s"] is not None:
             cdf = idx["task_latency_cdf_s"]
             print(f"  latency p50={cdf['p50']:.3f}s p95={cdf['p95']:.3f}s "
                   f"p99={cdf['p99']:.3f}s  "
                   f"jain={idx['task_latency_jain']:.3f}")
             print(f"  hops={idx['hop_histogram']} "
                   f"exits={idx['exit_label_histogram']}")
-        print(f"wrote {write_chrome_trace(args.trace, dec)} "
+        hdec = None
+        if args.trace_hops > 0:
+            hdec = decode_hops(np.asarray(m["trace_hops"]),
+                               np.asarray(m["trace_hop_overflow"]))
+            hix = hop_indices(hdec, tick_s=cfg_tr.tick_s)
+            print(f"  hop records={hix['hop_count']} over {hix['link_count']}"
+                  f" links, stalled={hix['stalled_hop_count']} "
+                  f"overflow={hix['hop_overflow']}")
+            if hix["hop_transfer_time_s_quantiles"] is not None:
+                ht = hix["hop_transfer_time_s_quantiles"]
+                qw = hix["hop_queue_wait_s_quantiles"]
+                print(f"  hop time p50={ht['p50']:.3f}s p95={ht['p95']:.3f}s"
+                      f"  queue-wait p95={qw['p95']:.3f}s")
+        print(f"wrote "
+              f"{write_chrome_trace(args.trace, dec, hdec, cfg_tr.tick_s)} "
               "(open in chrome://tracing or ui.perfetto.dev)")
 
     if args.procs > 1:

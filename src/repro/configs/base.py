@@ -350,3 +350,10 @@ class SwarmConfig:
     # captured).  0 (default) is fully off — no trace state exists and
     # every metric is bit-identical to an untraced build.
     trace_capacity: int = 0
+    # > 0 enables the second in-scan stream: one fixed-width HopRecord per
+    # *delivered transfer* (seq/src/dst/t_depart/t_arrive/bits/
+    # boundary_layer/stall_ticks), scattered by a dedicated hop sequence
+    # counter assigned at transfer initiation.  Independent of
+    # trace_capacity (either stream can be on alone); 0 (default) is fully
+    # off with the same zero-cost guarantee.
+    trace_hop_capacity: int = 0

@@ -28,13 +28,15 @@ Strategy ids stay *traced* scalars (one executable covers all five
 strategies per cfg), configs stay static — identical compile economics to
 the simulator itself.
 
-Per-task telemetry (DESIGN.md §10) rides through every backend unchanged:
-a traced config (``trace_capacity > 0``) adds ``trace_records`` /
-``trace_overflow`` leaves to the metric dict, which vmap/shard_map batch
-over the run axis and the streaming loop concatenates per chunk — so
-record buffers are bit-identical across backends and survive the same
-chunk-level checkpoint resume as the scalar metrics (tested in
-``tests/test_trace.py``).
+Per-task and per-hop telemetry (DESIGN.md §10) ride through every backend
+unchanged: a traced config (``trace_capacity > 0`` and/or
+``trace_hop_capacity > 0``) adds ``trace_records`` / ``trace_overflow``
+(and ``trace_hops`` / ``trace_hop_overflow``) leaves to the metric dict,
+which vmap/shard_map batch over the run axis and the streaming loop
+concatenates per chunk — so record buffers are bit-identical across
+backends and survive the same chunk-level checkpoint resume as the
+scalar metrics (tested in ``tests/test_trace.py`` /
+``tests/test_hops.py``).
 """
 from __future__ import annotations
 

@@ -88,20 +88,24 @@ def code_version() -> str:
 
 
 def _compact_trace(key: str, v) -> np.ndarray:
-    """Trim trailing all-unwritten slots off a ``trace_records`` buffer.
+    """Trim trailing all-unwritten slots off a record buffer
+    (``trace_records`` / ``trace_hops``).
 
-    Slots are seq-indexed, so a buffer sized generously above the task
+    Slots are seq-indexed, so a buffer sized generously above the record
     count is mostly ``seq = -1`` sentinel rows; persisting them as JSON
-    would bloat ``result.json`` by the (capacity / tasks) ratio.  Only
+    would bloat ``result.json`` by the (capacity / records) ratio.  Only
     slots past the last written seq of *any* run are dropped — per-run
     shape structure and every written record survive, so decode/export of
-    a cache hit equals the freshly computed buffer.
+    a cache hit equals the freshly computed buffer.  Both schemas keep
+    ``seq`` in column 0 (asserted), so one trim covers both streams.
     """
     rec = np.asarray(v, np.float32)
-    if key != "trace_records" or rec.ndim != 3 or rec.shape[1] == 0:
+    if (key not in ("trace_records", "trace_hops") or rec.ndim != 3
+            or rec.shape[1] == 0):
         return rec
     from repro.trace import schema
-    written = np.nonzero((rec[..., schema.SEQ] >= 0).any(axis=0))[0]
+    assert schema.SEQ == 0 and schema.HOP_SEQ == 0
+    written = np.nonzero((rec[..., 0] >= 0).any(axis=0))[0]
     return rec[:, :int(written[-1]) + 1 if written.size else 0]
 
 

@@ -91,12 +91,14 @@ def init_state(key, cfg: SwarmConfig, n: int) -> Dict:
         "done_count": jnp.float32(0), "lat_sum": jnp.float32(0),
         "acc_sum": jnp.float32(0), "proc_gflops": jnp.zeros((n,), jnp.float32),
         "e_comp": jnp.float32(0), "e_tx": jnp.float32(0),
-        "tx_count": jnp.float32(0), "tx_time_sum": jnp.float32(0),
+        "tx_count": jnp.float32(0), "tx_delivered": jnp.float32(0),
+        "tx_time_sum": jnp.float32(0),
         "drop_count": jnp.float32(0), "gen_count": jnp.float32(0),
-        # per-task telemetry (repro.trace): {} when trace_capacity == 0,
-        # so the untraced state pytree — and every number downstream — is
-        # exactly the historical one
+        # per-task + per-hop telemetry (repro.trace): {} when the
+        # capacities are 0, so the untraced state pytree — and every
+        # number downstream — is exactly the historical one
         **trace_record.init_trace(cfg, n),
+        **trace_record.init_hops(cfg, n),
     }
 
 
@@ -324,9 +326,13 @@ def summarize(st, cfg: SwarmConfig, profile: TaskProfile) -> Dict:
         "completed": st["done_count"], "generated": st["gen_count"],
         "avg_latency_s": al, "avg_accuracy": acc,
         "remaining_gflops": jnp.sum(rem_q) + jnp.sum(rem_tx),
+        # mean over *delivered* transfers: tx_time_sum only accumulates at
+        # delivery, so dividing by initiations (tx_count) would bias the
+        # mean low whenever transfers are still in flight at sim end
         "avg_transfer_time_s": st["tx_time_sum"]
-        / jnp.maximum(st["tx_count"], 1.0),
+        / jnp.maximum(st["tx_delivered"], 1.0),
         "transfers": st["tx_count"],
+        "transfers_delivered": st["tx_delivered"],
         "jain_fairness": jain,
         "energy_per_task_j": ae,
         "energy_total_j": st["e_comp"] + st["e_tx"],
@@ -340,6 +346,11 @@ def summarize(st, cfg: SwarmConfig, profile: TaskProfile) -> Dict:
         # decode/aggregate turn them into task-level indices)
         out["trace_records"] = st["trace_records"]
         out["trace_overflow"] = st["trace_overflow"]
+    if trace_record.hops_enabled(cfg):
+        # the per-hop stream, same conventions (trace_ prefix, decoded
+        # into hop-resolved indices by trace.decode_hops/hop_indices)
+        out["trace_hops"] = st["trace_hops"]
+        out["trace_hop_overflow"] = st["trace_hop_overflow"]
     return out
 
 

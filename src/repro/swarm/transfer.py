@@ -6,6 +6,15 @@ to the last layer boundary per §3.1, ship the boundary activation bits);
 fine ticks *progress* it at the epoch-frozen link capacity and *deliver* it
 into the destination queue — one delivery per receiver per tick, lowest
 origin index winning contention.
+
+Accounting note: a transfer whose payload has fully arrived
+(``tx_bits <= 0``) but that lost receiver contention stays ``tx_active``
+until it wins a delivery slot.  Those waiting ticks are *queue-wait*, not
+airtime — the radio is done — so bit decrement and transmit-energy accrual
+freeze once ``tx_bits <= 0`` (they used to keep running, over-counting
+``e_tx`` and the task's ``tx_energy`` for every contended delivery).
+Under hop capture the waiting ticks are counted in ``hop_stall`` instead,
+alongside endpoint-down fault stalls.
 """
 from __future__ import annotations
 
@@ -14,7 +23,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import SwarmConfig
 from repro.swarm.queues import INT_MAX, head_slot, pop_head, push
-from repro.swarm.tasks import TaskProfile, boundary_bits, snap_to_boundary
+from repro.swarm.tasks import (TaskProfile, boundary_bits, layer_of,
+                               snap_to_boundary)
 from repro.trace import record as trace_record
 
 
@@ -31,6 +41,17 @@ def initiate(st, elig, tgt, t0, profile: TaskProfile):
         for f in ("src", "energy", "txtime"):
             st[f"tx_{f}"] = jnp.where(elig, st[f"q_{f}"][rows, head],
                                       st[f"tx_{f}"])
+    if "hop_seq" in st:      # hop stream: assign seqs at initiation (§10.5)
+        hseq = st["hop_counter"] + jnp.cumsum(elig.astype(jnp.int32)) - 1
+        st["hop_seq"] = jnp.where(elig, hseq, st["hop_seq"])
+        st["hop_counter"] = st["hop_counter"] + jnp.sum(
+            elig.astype(jnp.int32))
+        st["hop_bits"] = jnp.where(elig, bits, st["hop_bits"])
+        st["hop_layer"] = jnp.where(
+            elig, jnp.clip(layer_of(profile, cum_h), 0,
+                           profile.cum_gflops.shape[0] - 1),
+            st["hop_layer"])
+        st["hop_stall"] = jnp.where(elig, 0, st["hop_stall"])
     st["tx_dst"] = jnp.where(elig, tgt, st["tx_dst"])
     st["tx_bits"] = jnp.where(elig, bits, st["tx_bits"])
     st["tx_cum"] = jnp.where(elig, cum_snap, st["tx_cum"])
@@ -58,13 +79,20 @@ def progress(st, cap, alive, cfg: SwarmConfig, t_now):
     rate = cap[rows, st["tx_dst"]]                         # bit/s
     live = alive & alive[st["tx_dst"]]
     active = st["tx_active"] & live
+    # a fully-arrived payload is off the air: no further bit decrement or
+    # transmit-energy accrual while it waits out receiver contention
+    pre_arrived = st["tx_bits"] <= 0.0
+    flying = active & ~pre_arrived
     tx_w = 10.0 ** (cfg.tx_power_dbm / 10.0) * 1e-3
     st = dict(st)
-    st["tx_bits"] = jnp.where(active, st["tx_bits"] - rate * tick,
+    if "hop_stall" in st:    # pending but not progressing: fault stall or
+        st["hop_stall"] = st["hop_stall"] + (   # post-arrival queue-wait
+            st["tx_active"] & (~live | pre_arrived)).astype(jnp.int32)
+    st["tx_bits"] = jnp.where(flying, st["tx_bits"] - rate * tick,
                               st["tx_bits"])
-    st["e_tx"] = st["e_tx"] + jnp.sum(active) * tx_w * tick
+    st["e_tx"] = st["e_tx"] + jnp.sum(flying) * tx_w * tick
     if "tx_energy" in st:    # attribute the airtime joules to the task
-        st["tx_energy"] = st["tx_energy"] + jnp.where(active,
+        st["tx_energy"] = st["tx_energy"] + jnp.where(flying,
                                                       tx_w * tick, 0.0)
     arrived = active & (st["tx_bits"] <= 0.0)
     # receiver contention: lowest-index origin wins per destination
@@ -81,6 +109,11 @@ def progress(st, cap, alive, cfg: SwarmConfig, t_now):
     created_d = st["tx_created"][inv]
     visited_d = st["tx_visited"][inv] | jax.nn.one_hot(
         inv, n, dtype=bool)                                 # mark origin
+    if trace_record.hops_enabled(cfg):
+        st = trace_record.write_hop_records(
+            st, deliver, seq=st["hop_seq"], src=rows, dst=st["tx_dst"],
+            t_depart=st["tx_start"], t_arrive=t_now, bits=st["hop_bits"],
+            boundary_layer=st["hop_layer"], stall_ticks=st["hop_stall"])
     if trace_record.enabled(cfg):
         st = trace_record.traced_push(
             st, dst_mask, cum_d, created_d, visited_d,
@@ -91,6 +124,8 @@ def progress(st, cap, alive, cfg: SwarmConfig, t_now):
     else:
         st = push(st, dst_mask, cum_d, created_d, visited_d)
     st["tx_active"] = st["tx_active"] & ~deliver
+    st["tx_delivered"] = st["tx_delivered"] + jnp.sum(
+        deliver.astype(jnp.float32))
     st["tx_time_sum"] = st["tx_time_sum"] + jnp.sum(
         jnp.where(deliver, t_now - st["tx_start"], 0.0))
     return st

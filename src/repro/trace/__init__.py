@@ -1,28 +1,38 @@
-"""`repro.trace` — per-task telemetry (DESIGN.md §10).
+"""`repro.trace` — per-task and per-hop telemetry (DESIGN.md §10).
 
 The simulator only accumulates scalar sums; this package captures one
 fixed-width :mod:`~repro.trace.schema` TaskRecord per completed (and
-dropped) task *inside* the jitted scan (:mod:`~repro.trace.record` — no
+dropped) task — and, as a second stream, one HopRecord per delivered
+transfer — *inside* the jitted scan (:mod:`~repro.trace.record` — no
 host callbacks, vmap/shard_map/lax.map-safe), decodes the buffers on the
 host (:mod:`~repro.trace.decode`), aggregates them into the paper's
-task-level indices — latency CDF, Jain fairness over task latencies, hop
-and exit histograms, energy per task (:mod:`~repro.trace.aggregate`) —
-and exports a Chrome-trace/Perfetto timeline (:mod:`~repro.trace.export`).
+task- and hop-level indices — latency CDF, Jain fairness over task
+latencies, hop and exit histograms, energy per task, per-hop transfer
+time and per-link bits with the queue-wait vs in-flight decomposition
+(:mod:`~repro.trace.aggregate`) — and exports a Chrome-trace/Perfetto
+timeline with true per-hop slices and flow arrows
+(:mod:`~repro.trace.export`).
 
-Enabled by ``SwarmConfig.trace_capacity > 0``; with the default 0 no
-trace state exists anywhere and the simulator is bit-identical to an
-untraced build.
+Enabled by ``SwarmConfig.trace_capacity > 0`` (tasks) and
+``SwarmConfig.trace_hop_capacity > 0`` (hops), independently; with the
+default 0 no trace state exists anywhere and the simulator is
+bit-identical to an untraced build.
 """
 from repro.trace import schema
 from repro.trace.aggregate import (exit_label_histogram, hop_histogram,
-                                   jain_fairness, quantile_summary,
-                                   trace_indices)
-from repro.trace.decode import decode, split_runs
-from repro.trace.export import chrome_trace_events, write_chrome_trace
-from repro.trace.record import init_trace, traced_push, write_records
+                                   hop_indices, int_histogram,
+                                   jain_fairness, link_bits,
+                                   quantile_summary, trace_indices)
+from repro.trace.decode import decode, decode_hops, split_runs
+from repro.trace.export import (chrome_trace_events, hop_trace_events,
+                                write_chrome_trace)
+from repro.trace.record import (init_hops, init_trace, traced_push,
+                                write_hop_records, write_records)
 
-__all__ = ["schema", "decode", "split_runs",
-           "trace_indices", "quantile_summary", "jain_fairness",
-           "hop_histogram", "exit_label_histogram",
-           "chrome_trace_events", "write_chrome_trace",
-           "init_trace", "traced_push", "write_records"]
+__all__ = ["schema", "decode", "decode_hops", "split_runs",
+           "trace_indices", "hop_indices", "link_bits",
+           "quantile_summary", "jain_fairness",
+           "hop_histogram", "exit_label_histogram", "int_histogram",
+           "chrome_trace_events", "hop_trace_events", "write_chrome_trace",
+           "init_trace", "init_hops", "traced_push",
+           "write_records", "write_hop_records"]

@@ -1,23 +1,33 @@
-"""Task-level aggregates (DESIGN.md §10.3) — the paper's evaluation
-currency: per-task latency distributions, Jain fairness over task
-latencies, hop/exit histograms and energy per task, all computed from
-decoded TaskRecords rather than run means.
+"""Task- and hop-level aggregates (DESIGN.md §10.3, §10.5) — the paper's
+evaluation currency: per-task latency distributions, Jain fairness over
+task latencies, hop/exit histograms and energy per task, plus the
+hop-resolved transfer decomposition (per-hop transfer time, per-link
+bits, queue-wait vs in-flight), all computed from decoded records rather
+than run means.
+
+Both index builders emit a *stable key set*: an all-drop (or hop-free)
+trace produces the same JSON keys as a populated one, with empty
+histograms and ``None`` quantiles — so BENCH diffs across sweep points
+stay comparable no matter what each point's tasks did.
 
 Kept free of ``repro.fleet`` imports so ``fleet.report`` can call in
 without a cycle; the quantile grid matches ``report.LATENCY_QS``.
 """
 from __future__ import annotations
 
-from typing import Dict, Mapping, Sequence
+from typing import Dict, Mapping, Optional, Sequence
 
 import numpy as np
 
 QS = (0.05, 0.25, 0.5, 0.75, 0.9, 0.95, 0.99)
 
 
-def quantile_summary(x, qs: Sequence[float] = QS) -> Dict[str, float]:
-    """``{"p05": ..., "p50": ..., ...}`` of a 1-D sample."""
+def quantile_summary(x, qs: Sequence[float] = QS) -> Optional[Dict[str, float]]:
+    """``{"p05": ..., "p50": ..., ...}`` of a 1-D sample; ``None`` when the
+    sample is empty (a stable null beats a key that comes and goes)."""
     x = np.asarray(x, np.float64)
+    if x.size == 0:
+        return None
     return {f"p{int(q * 100):02d}": float(np.quantile(x, q)) for q in qs}
 
 
@@ -29,40 +39,92 @@ def jain_fairness(x) -> float:
     return float(x.sum() ** 2 / (x.size * np.square(x).sum() + 1e-12))
 
 
-def _histogram(col) -> Dict[str, int]:
+def int_histogram(col) -> Dict[str, int]:
+    """Value → count histogram of an integral column, string-keyed for
+    JSON (the one histogram implementation every surface shares)."""
     vals, counts = np.unique(np.asarray(col, np.int64), return_counts=True)
     return {str(int(v)): int(c) for v, c in zip(vals, counts)}
 
 
 def hop_histogram(dec: Mapping) -> Dict[str, int]:
     """Completed-task counts by number of forwarding hops."""
-    return _histogram(dec["hops"][~dec["is_dropped"]])
+    return int_histogram(dec["hops"][~dec["is_dropped"]])
 
 
 def exit_label_histogram(dec: Mapping) -> Dict[str, int]:
     """Task counts by exit label (0 full / 1 med / 2 high / 3 dropped)."""
-    return _histogram(dec["exit_label"])
+    return int_histogram(dec["exit_label"])
 
 
 def trace_indices(dec: Mapping) -> Dict:
-    """Decoded records → the JSON-ready task-level section of a report.
+    """Decoded TaskRecords → the JSON-ready task-level report section.
 
-    Deterministic in the records; empty-completion traces degrade to the
-    counters alone (no quantiles of an empty sample).
+    Deterministic in the records, with a *stable schema*: an all-drop
+    trace emits the same keys as a populated one (empty histograms, null
+    quantiles), so the key set never varies across sweep points.
     """
     done = ~dec["is_dropped"]
     lat = dec["latency_s"][done]
-    out: Dict = {
+    return {
         "task_count": int(done.sum()),
         "dropped_count": int(dec["is_dropped"].sum()),
         "trace_overflow": int(dec["overflow"]),
         "exit_label_histogram": exit_label_histogram(dec),
+        "hop_histogram": hop_histogram(dec),
+        "task_latency_cdf_s": quantile_summary(lat),
+        "task_latency_jain": jain_fairness(lat) if lat.size else None,
+        "energy_per_task_j_quantiles": quantile_summary(
+            dec["energy_j"][done]),
+        "tx_time_s_mean": (float(dec["tx_time_s"][done].mean())
+                           if lat.size else None),
     }
-    if lat.size:
-        out["task_latency_cdf_s"] = quantile_summary(lat)
-        out["task_latency_jain"] = jain_fairness(lat)
-        out["hop_histogram"] = hop_histogram(dec)
-        out["energy_per_task_j_quantiles"] = quantile_summary(
-            dec["energy_j"][done])
-        out["tx_time_s_mean"] = float(dec["tx_time_s"][done].mean())
+
+
+def link_bits(hdec: Mapping) -> Dict[str, float]:
+    """Total bits shipped per directed link, keyed ``"src->dst"``.
+
+    Vectorized (a pooled point can hold millions of hop rows): groupby on
+    the combined (src, dst) key via ``np.unique`` + weighted bincount.
+    """
+    src = np.asarray(hdec["src"], np.int64)
+    dst = np.asarray(hdec["dst"], np.int64)
+    if src.size == 0:
+        return {}
+    n = int(max(src.max(), dst.max())) + 1
+    uniq, inv = np.unique(src * n + dst, return_inverse=True)
+    sums = np.bincount(inv, weights=np.asarray(hdec["bits"], np.float64))
+    return {f"{int(k // n)}->{int(k % n)}": float(s)
+            for k, s in zip(uniq, sums)}
+
+
+def hop_indices(hdec: Mapping, tick_s: Optional[float] = None) -> Dict:
+    """Decoded HopRecords → the JSON-ready hop-resolved report section.
+
+    ``tick_s`` converts ``stall_ticks`` into the queue-wait vs in-flight
+    wall-time decomposition; without it the stall accounting stays in
+    ticks and the seconds-valued entries are ``None`` (keys stable either
+    way).  ``hop_count`` counts *delivered* hops — transfers still in
+    flight at sim end never wrote a record and are not overflow.
+    """
+    t = hdec["transfer_time_s"]
+    stall = hdec["stall_ticks"]
+    lb = link_bits(hdec)
+    out: Dict = {
+        "hop_count": int(t.size),
+        "hop_overflow": int(hdec["overflow"]),
+        "hop_transfer_time_s_quantiles": quantile_summary(t),
+        "hop_bits_quantiles": quantile_summary(hdec["bits"]),
+        "link_count": len(lb),
+        "link_bits_quantiles": quantile_summary(list(lb.values())),
+        "hop_stall_ticks_quantiles": quantile_summary(stall),
+        "stalled_hop_count": int((stall > 0).sum()),
+        "hop_boundary_layer_histogram": int_histogram(
+            hdec["boundary_layer"]),
+        "hop_queue_wait_s_quantiles": None,
+        "hop_in_flight_s_quantiles": None,
+    }
+    if tick_s is not None and t.size:
+        wait = stall.astype(np.float64) * float(tick_s)
+        out["hop_queue_wait_s_quantiles"] = quantile_summary(wait)
+        out["hop_in_flight_s_quantiles"] = quantile_summary(t - wait)
     return out

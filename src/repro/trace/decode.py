@@ -1,10 +1,11 @@
-"""Host-side TaskRecord decoding (DESIGN.md §10.3).
+"""Host-side TaskRecord/HopRecord decoding (DESIGN.md §10.3).
 
-``decode`` masks the unwritten slots out of one or many record buffers
-(any leading batch shape — a single run's ``[C, F]`` buffer, a sweep
-point's ``[num_runs, C, F]`` stack) and splits the packed rows back into
-named numpy columns.  Row order is run-major then seq-ascending (slot
-index == seq), so the output is deterministic in the inputs.
+``decode`` (tasks) and ``decode_hops`` mask the unwritten slots out of
+one or many record buffers (any leading batch shape — a single run's
+``[C, F]`` buffer, a sweep point's ``[num_runs, C, F]`` stack) and split
+the packed rows back into named numpy columns.  Row order is run-major
+then seq-ascending (slot index == seq), so the output is deterministic
+in the inputs.
 """
 from __future__ import annotations
 
@@ -15,33 +16,54 @@ import numpy as np
 from repro.trace import schema
 
 
+def _decode(records, overflow, fields, int_fields, seq_idx
+            ) -> Dict[str, np.ndarray]:
+    rec = np.asarray(records, np.float64).reshape(-1, len(fields))
+    rec = rec[rec[:, seq_idx] >= 0.0]
+    out: Dict[str, np.ndarray] = {}
+    for i, name in enumerate(fields):
+        col = rec[:, i]
+        out[name] = (col.astype(np.int64) if name in int_fields else col)
+    out["overflow"] = np.int64(0 if overflow is None
+                               else np.sum(np.asarray(overflow)))
+    return out
+
+
 def decode(records, overflow=None) -> Dict[str, np.ndarray]:
-    """Record buffer(s) → dict of per-task numpy columns.
+    """TaskRecord buffer(s) → dict of per-task numpy columns.
 
     Integral fields come back as int64, times/energies as float64, plus
     two derived columns: ``latency_s`` (completed − created) and
     ``is_dropped``.  ``overflow`` (scalar or per-run array) is summed into
     the ``"overflow"`` entry (0-d int64) when given.
     """
-    rec = np.asarray(records, np.float64).reshape(-1, schema.NUM_FIELDS)
-    rec = rec[rec[:, schema.SEQ] >= 0.0]
-    out: Dict[str, np.ndarray] = {}
-    for i, name in enumerate(schema.FIELDS):
-        col = rec[:, i]
-        out[name] = (col.astype(np.int64) if name in schema.INT_FIELDS
-                     else col)
+    out = _decode(records, overflow, schema.FIELDS, schema.INT_FIELDS,
+                  schema.SEQ)
     out["latency_s"] = out["completed_t"] - out["created_t"]
     out["is_dropped"] = out["exit_label"] == schema.DROPPED
-    out["overflow"] = np.int64(0 if overflow is None
-                               else np.sum(np.asarray(overflow)))
     return out
 
 
-def split_runs(records, overflow=None):
+def decode_hops(records, overflow=None) -> Dict[str, np.ndarray]:
+    """HopRecord buffer(s) → dict of per-hop numpy columns.
+
+    Adds the derived ``transfer_time_s`` column (``t_arrive − t_depart``,
+    the hop's full initiate→delivery latency including stalls); convert
+    ``stall_ticks`` to seconds with the run's ``tick_s`` when a wall-time
+    decomposition is needed (``aggregate.hop_indices`` does).
+    """
+    out = _decode(records, overflow, schema.HOP_FIELDS,
+                  schema.HOP_INT_FIELDS, schema.HOP_SEQ)
+    out["transfer_time_s"] = out["t_arrive"] - out["t_depart"]
+    return out
+
+
+def split_runs(records, overflow=None, hops: bool = False):
     """``[num_runs, C, F]`` stack → list of per-run decoded dicts."""
     rec = np.asarray(records)
     if rec.ndim == 2:
         rec = rec[None]
     ovf = (np.zeros((rec.shape[0],)) if overflow is None
            else np.asarray(overflow).reshape(rec.shape[0]))
-    return [decode(r, o) for r, o in zip(rec, ovf)]
+    fn = decode_hops if hops else decode
+    return [fn(r, o) for r, o in zip(rec, ovf)]

@@ -6,19 +6,25 @@ and https://ui.perfetto.dev load directly:
   * one complete (``"X"``) slice per completed task on its completion
     node's track, spanning creation → completion (µs timebase);
   * one instant (``"i"``) event per dropped task at its drop time;
-  * a flow arrow (``"s"`` → ``"f"``) from the generating node's track to
-    the completion node's for every task that was forwarded at least once
-    — per-hop timestamps are not in the TaskRecord (one record per task,
-    not per hop), so the arrow renders the net src→dst relocation, with
-    the hop count and total in-flight time in ``args``.
+  * **without hop records**: a flow arrow (``"s"`` → ``"f"``) from the
+    generating node's track to the completion node's for every task that
+    was forwarded at least once — the net src→dst relocation, with the
+    hop count and total in-flight time in ``args``;
+  * **with hop records** (``decode_hops`` output passed as ``hops``):
+    the net arrow is replaced by the true per-hop timeline — per
+    delivered hop an in-flight ``"hop"`` slice on the *sender's* track
+    (its single outgoing radio is busy exactly then), a ``"queue"``
+    slice on the visited *receiving* node's track for the queue-wait
+    tail (stall ticks: receiver contention / fault stalls), and one flow
+    arrow per hop from departure to delivery.
 
-Everything is stamped from TaskRecord fields only — no wall clock — so
-the export is deterministic in the records.
+Everything is stamped from record fields only — no wall clock — so the
+export is deterministic in the records.
 """
 from __future__ import annotations
 
 import json
-from typing import Dict, List, Mapping
+from typing import Dict, List, Mapping, Optional
 
 from repro.trace import schema
 
@@ -29,9 +35,65 @@ def _base(dec: Mapping, i: int, ph: str) -> Dict:
     return {"ph": ph, "pid": 0, "tid": int(dec["dst"][i])}
 
 
-def chrome_trace_events(dec: Mapping) -> List[Dict]:
-    """Decoded single-run records → Trace Event list (chronological)."""
-    tracks = sorted({*map(int, dec["src"]), *map(int, dec["dst"])})
+def hop_trace_events(hops: Mapping, tick_s: Optional[float] = None
+                     ) -> List[Dict]:
+    """Decoded single-run HopRecords → per-hop Trace Event list.
+
+    ``tick_s`` sizes the queue-wait slice (``stall_ticks`` is in ticks);
+    without it stall ticks still ride in ``args`` but no queue slice is
+    drawn (its wall-time extent would be unknown).
+    """
+    events: List[Dict] = []
+    for i in range(len(hops["seq"])):
+        seq = int(hops["seq"][i])
+        src, dst = int(hops["src"][i]), int(hops["dst"][i])
+        t0, t1 = float(hops["t_depart"][i]), float(hops["t_arrive"][i])
+        stall = int(hops["stall_ticks"][i])
+        args = {"seq": seq, "src": src, "dst": dst,
+                "bits": float(hops["bits"][i]),
+                "boundary_layer": int(hops["boundary_layer"][i]),
+                "stall_ticks": stall}
+        wait_s = stall * tick_s if tick_s is not None else None
+        if wait_s is not None:
+            args["queue_wait_s"] = wait_s
+            args["in_flight_s"] = (t1 - t0) - wait_s
+        # the sender's radio is busy only while bits are on the air: with
+        # tick_s known the slice is the in-flight interval and the stall
+        # tail renders as its own queue slice below; without it, the full
+        # span (the wait's wall-time extent is unknown)
+        fly_s = (t1 - t0) - wait_s if wait_s is not None else (t1 - t0)
+        events.append({"ph": "X", "pid": 0, "tid": src,
+                       "name": f"hop {src}→{dst}", "cat": "hop",
+                       "ts": t0 * _US, "dur": fly_s * _US,
+                       "args": args})
+        if wait_s is not None and stall > 0:
+            # queue-wait at the visited receiving node, adjacent to the
+            # in-flight slice (mid-flight fault stalls are approximated
+            # into the same tail — the record stores a total, not phases)
+            events.append({"ph": "X", "pid": 0, "tid": dst,
+                           "name": "queue-wait", "cat": "queue",
+                           "ts": (t1 - wait_s) * _US, "dur": wait_s * _US,
+                           "args": args})
+        events.append({"ph": "s", "pid": 0, "tid": src, "id": seq,
+                       "cat": "transfer", "name": "xfer", "ts": t0 * _US,
+                       "args": args})
+        events.append({"ph": "f", "pid": 0, "tid": dst, "bp": "e",
+                       "id": seq, "cat": "transfer", "name": "xfer",
+                       "ts": t1 * _US})
+    return events
+
+
+def chrome_trace_events(dec: Mapping, hops: Optional[Mapping] = None,
+                        tick_s: Optional[float] = None) -> List[Dict]:
+    """Decoded single-run records → Trace Event list (chronological).
+
+    With ``hops`` (a ``decode_hops`` dict for the same run) the per-task
+    net src→dst arrows are replaced by true per-hop slices + one flow
+    arrow per hop (see module docstring).
+    """
+    tracks = sorted({*map(int, dec["src"]), *map(int, dec["dst"]),
+                     *(map(int, hops["src"]) if hops is not None else ()),
+                     *(map(int, hops["dst"]) if hops is not None else ())})
     events: List[Dict] = [
         {"ph": "M", "pid": 0, "name": "process_name",
          "args": {"name": "swarm"}}]
@@ -57,21 +119,27 @@ def chrome_trace_events(dec: Mapping) -> List[Dict]:
         events.append({**_base(dec, i, "X"), "name": f"task {seq}",
                        "cat": "task", "ts": dec["created_t"][i] * _US,
                        "dur": dec["latency_s"][i] * _US, "args": args})
-        if dec["hops"][i] > 0:      # net relocation arrow src → dst
+        if hops is None and dec["hops"][i] > 0:
+            # no hop stream: fall back to the net relocation arrow
             events.append({"ph": "s", "pid": 0, "tid": int(dec["src"][i]),
                            "id": seq, "cat": "transfer", "name": "xfer",
                            "ts": dec["created_t"][i] * _US, "args": args})
             events.append({**_base(dec, i, "f"), "bp": "e", "id": seq,
                            "cat": "transfer", "name": "xfer",
                            "ts": dec["completed_t"][i] * _US})
+    if hops is not None:
+        events += hop_trace_events(hops, tick_s)
     return events
 
 
-def write_chrome_trace(path: str, dec: Mapping) -> str:
+def write_chrome_trace(path: str, dec: Mapping,
+                       hops: Optional[Mapping] = None,
+                       tick_s: Optional[float] = None) -> str:
     """Write ``{"traceEvents": [...]}`` JSON; returns ``path``."""
-    doc = {"traceEvents": chrome_trace_events(dec),
+    doc = {"traceEvents": chrome_trace_events(dec, hops, tick_s),
            "displayTimeUnit": "ms",
-           "otherData": {"schema": list(schema.FIELDS)}}
+           "otherData": {"schema": list(schema.FIELDS),
+                         "hop_schema": list(schema.HOP_FIELDS)}}
     with open(path, "w") as f:
         json.dump(doc, f)
     return path

@@ -1,4 +1,4 @@
-"""In-scan TaskRecord capture (DESIGN.md §10.2).
+"""In-scan TaskRecord + HopRecord capture (DESIGN.md §10.2, §10.5).
 
 A fixed-capacity record buffer rides in the simulator's scan carry; every
 task completion (and queue-full drop) scatters one :mod:`schema` row into
@@ -21,6 +21,15 @@ when ``trace_capacity == 0``):
     time in flight;
   * ``tx_src`` / ``tx_energy`` / ``tx_txtime`` — the same, for the
     in-flight outgoing transfer of each node.
+
+The hop stream (``SwarmConfig.trace_hop_capacity``) is the same design a
+level down: one row per *delivered transfer*, keyed by a dedicated hop
+sequence counter assigned at ``transfer.initiate`` — each hop delivers at
+most once, so the scatter is again order-independent.  It is gated
+independently of the task stream (either can be on without the other)
+and carries its own per-node in-flight attribution (``hop_seq`` /
+``hop_bits`` / ``hop_layer`` / ``hop_stall``), all absent at the default
+capacity 0.
 """
 from __future__ import annotations
 
@@ -52,27 +61,65 @@ def init_trace(cfg: SwarmConfig, n: int) -> dict:
     }
 
 
-def write_records(st, mask, *, seq, src, dst, created_t, completed_t,
-                  exit_label, layers, hops, energy_j, tx_time_s):
-    """Scatter one record per ``mask`` lane into the buffer at slot ``seq``.
+def hops_enabled(cfg: SwarmConfig) -> bool:
+    return cfg.trace_hop_capacity > 0
+
+
+def init_hops(cfg: SwarmConfig, n: int) -> dict:
+    """Hop-stream state entries for ``init_state`` — ``{}`` when hop
+    capture is off, so the state pytree is unchanged field-for-field."""
+    if not hops_enabled(cfg):
+        return {}
+    return {
+        "trace_hops": schema.empty_hop_buffer(cfg.trace_hop_capacity),
+        "trace_hop_overflow": jnp.int32(0),
+        "hop_counter": jnp.int32(0),
+        # in-flight hop attribution, one slot per node (single outgoing
+        # transfer per node, §3.2): the hop's seq, the bits staged at
+        # initiate (tx_bits decrements in flight), the boundary layer the
+        # task was snapped to, and the stall ticks accumulated so far
+        "hop_seq": jnp.zeros((n,), jnp.int32),
+        "hop_bits": jnp.zeros((n,), jnp.float32),
+        "hop_layer": jnp.zeros((n,), jnp.int32),
+        "hop_stall": jnp.zeros((n,), jnp.int32),
+    }
+
+
+def _scatter_records(st, key_records, key_overflow, mask, seq, rows):
+    """Shared scatter-by-seq + saturating-overflow core of both streams.
 
     Lanes with ``~mask`` (and captured-but-overflowed seqs) target slot
     ``capacity`` — out of bounds, dropped by the scatter mode — so the
     kept rows are deterministic regardless of lane order.
     """
-    cap = st["trace_records"].shape[0]
-    rows = schema.pack(seq, src, dst, created_t, completed_t, exit_label,
-                       layers, hops, energy_j, tx_time_s)
+    cap = st[key_records].shape[0]
     slot = jnp.where(mask, seq, cap)
     st = dict(st)
-    st["trace_records"] = st["trace_records"].at[slot].set(rows,
-                                                           mode="drop")
+    st[key_records] = st[key_records].at[slot].set(rows, mode="drop")
     # saturate at int32 max instead of wrapping (clamp the increment to
     # the remaining headroom — int32-only, no x64 dependence)
     inc = jnp.sum(mask & (seq >= cap)).astype(jnp.int32)
-    room = jnp.int32(jnp.iinfo(jnp.int32).max) - st["trace_overflow"]
-    st["trace_overflow"] = st["trace_overflow"] + jnp.minimum(inc, room)
+    room = jnp.int32(jnp.iinfo(jnp.int32).max) - st[key_overflow]
+    st[key_overflow] = st[key_overflow] + jnp.minimum(inc, room)
     return st
+
+
+def write_records(st, mask, *, seq, src, dst, created_t, completed_t,
+                  exit_label, layers, hops, energy_j, tx_time_s):
+    """Scatter one TaskRecord per ``mask`` lane into slot ``seq``."""
+    rows = schema.pack(seq, src, dst, created_t, completed_t, exit_label,
+                       layers, hops, energy_j, tx_time_s)
+    return _scatter_records(st, "trace_records", "trace_overflow", mask,
+                            seq, rows)
+
+
+def write_hop_records(st, mask, *, seq, src, dst, t_depart, t_arrive, bits,
+                      boundary_layer, stall_ticks):
+    """Scatter one HopRecord per ``mask`` lane into slot ``seq``."""
+    rows = schema.pack_hop(seq, src, dst, t_depart, t_arrive, bits,
+                           boundary_layer, stall_ticks)
+    return _scatter_records(st, "trace_hops", "trace_hop_overflow", mask,
+                            seq, rows)
 
 
 def traced_push(st, mask, cum, created, visited, *, src, energy, txtime,

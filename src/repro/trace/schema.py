@@ -1,13 +1,14 @@
-"""TaskRecord layout (DESIGN.md §10.1).
+"""TaskRecord + HopRecord layouts (DESIGN.md §10.1, §10.5).
 
-One task = one fixed-width float32 row.  A packed row (rather than a
-struct-of-arrays dict) keeps the in-scan buffer a single carry leaf that
-every executor backend batches/concatenates/checkpoints without special
-cases, and makes the record vocabulary trivially shareable with the
-serving stack (``splitcompute.ServeStats`` builds the same rows on host).
+One task (or one hop) = one fixed-width float32 row.  A packed row
+(rather than a struct-of-arrays dict) keeps the in-scan buffer a single
+carry leaf that every executor backend batches/concatenates/checkpoints
+without special cases, and makes the record vocabulary trivially
+shareable with the serving stack (``splitcompute.ServeStats`` builds the
+same rows on host).
 
-Fields (float32; integral fields are exact up to 2^24, far above any
-realistic seq/node/layer count):
+TaskRecord fields (float32; integral fields are exact up to 2^24, far
+above any realistic seq/node/layer count):
 
   ==============  =========================================================
   ``seq``         global task sequence number at the task's *last* enqueue
@@ -23,6 +24,29 @@ realistic seq/node/layer count):
   ``energy_j``    compute + transfer energy attributed to the task
   ``tx_time_s``   total time the task spent in flight between nodes
   ==============  =========================================================
+
+HopRecord fields — one row per *delivered transfer* (the second in-scan
+stream, ``SwarmConfig.trace_hop_capacity``); a task relocated over k
+links leaves k rows, so hop-resolved timelines and per-link decomposition
+come from stored traces instead of the net src→dst summary:
+
+  ==================  =====================================================
+  ``seq``             global hop sequence number, assigned at
+                      ``transfer.initiate`` (in-flight hops at sim end
+                      never deliver, so their slots stay unwritten —
+                      never counted as overflow).  < 0 marks unwritten.
+  ``src``             origin node of this hop (the sender)
+  ``dst``             node the payload was delivered into
+  ``t_depart``        transfer initiation time, simulation seconds
+  ``t_arrive``        delivery time, simulation seconds
+  ``bits``            boundary activation bits shipped over the link
+  ``boundary_layer``  layer boundary the task was snapped to (§3.1)
+  ``stall_ticks``     ticks the transfer was pending but not progressing:
+                      endpoint-down fault stalls plus fully-arrived ticks
+                      spent waiting out receiver contention (queue-wait);
+                      in-flight airtime = (t_arrive − t_depart) −
+                      stall_ticks · tick_s
+  ==================  =====================================================
 """
 from __future__ import annotations
 
@@ -64,3 +88,30 @@ def pack_np(seq, src, dst, created_t, completed_t, exit_label, layers, hops,
 def empty_buffer(capacity: int) -> jnp.ndarray:
     """Unwritten ``[capacity, NUM_FIELDS]`` buffer (seq = -1 everywhere)."""
     return jnp.full((capacity, NUM_FIELDS), -1.0, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# HopRecord (the per-transfer stream; same conventions as TaskRecord)
+# ---------------------------------------------------------------------------
+
+HOP_FIELDS = ("seq", "src", "dst", "t_depart", "t_arrive", "bits",
+              "boundary_layer", "stall_ticks")
+(HOP_SEQ, HOP_SRC, HOP_DST, HOP_T_DEPART, HOP_T_ARRIVE, HOP_BITS,
+ HOP_BOUNDARY_LAYER, HOP_STALL_TICKS) = range(len(HOP_FIELDS))
+NUM_HOP_FIELDS = len(HOP_FIELDS)
+
+HOP_INT_FIELDS = ("seq", "src", "dst", "boundary_layer", "stall_ticks")
+
+
+def pack_hop(seq, src, dst, t_depart, t_arrive, bits, boundary_layer,
+             stall_ticks) -> jnp.ndarray:
+    """Stack per-hop field vectors into ``[..., NUM_HOP_FIELDS]`` f32 rows."""
+    cols = (seq, src, dst, t_depart, t_arrive, bits, boundary_layer,
+            stall_ticks)
+    return jnp.stack([jnp.asarray(c, jnp.float32) for c in
+                      jnp.broadcast_arrays(*cols)], axis=-1)
+
+
+def empty_hop_buffer(capacity: int) -> jnp.ndarray:
+    """Unwritten ``[capacity, NUM_HOP_FIELDS]`` buffer (seq = -1)."""
+    return jnp.full((capacity, NUM_HOP_FIELDS), -1.0, jnp.float32)

@@ -29,7 +29,8 @@ CFG = dataclasses.replace(SwarmConfig(), sim_time_s=2.0, num_workers=N)
 CFG_TR = dataclasses.replace(CFG, trace_capacity=512)
 SPEC_KILL = SweepSpec.build(
     "tracekill", dataclasses.replace(CFG, sim_time_s=1.0, num_workers=6,
-                                     trace_capacity=256),
+                                     trace_capacity=256,
+                                     trace_hop_capacity=256),
     axes={"gamma": (0.02, 0.1)}, strategies=(0, 4), num_runs=3)
 
 
@@ -199,9 +200,11 @@ def _bench_bytes(path, res):
 def test_sigkilled_traced_dispatch_resumes_to_identical_report(tmp_path):
     """A traced sweep whose worker is SIGKILL'd mid-run redispatches to a
     BENCH report byte-identical to an uninterrupted single-process run —
-    task-level CDFs included."""
+    task-level CDFs and hop-resolved indices included (SPEC_KILL carries
+    both record streams)."""
     ref = _bench_bytes(str(tmp_path / "ref.json"), execute(SPEC_KILL))
     assert b"task_latency_cdf_s" in ref
+    assert b"hop_transfer_time_s_quantiles" in ref
     store = ResultStore(str(tmp_path / "cache"))
     prog = str(tmp_path / "progress.jsonl")
     (proc,) = spawn_workers(SPEC_KILL, store.root, 1, lease_ttl_s=2.0,

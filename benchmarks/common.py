@@ -24,7 +24,12 @@ aggregate indices into ``artifacts/BENCH_fleet.json``.  Env knobs:
                             = C (run.py --trace-hops sets it) — BENCH
                             sections additionally gain the hop-resolved
                             indices (per-hop transfer-time / link-bits
-                            quantiles, queue-wait vs in-flight)
+                            quantiles, queue-wait vs in-flight, airtime-J
+                            energy attribution)
+  REPRO_FLEET_NEIGHBOR_K=K  sparse neighbor-list path: run sweeps with
+                            SwarmConfig.neighbor_mode="sparse",
+                            neighbor_k=K (run.py --neighbor-k sets it) —
+                            the O(N·k) φ epoch update, DESIGN.md §11
   REPRO_FULL_RUNS=1         the paper's 50 Monte-Carlo runs (default 16)
 
 Multi-host mode: with the ``REPRO_FLEET_*`` rank/world env contract set
@@ -75,12 +80,13 @@ def default_workers() -> int:
 
 def apply_trace_env(spec: SweepSpec) -> SweepSpec:
     """Fold the ``REPRO_FLEET_TRACE`` / ``REPRO_FLEET_TRACE_HOPS``
-    capacities into a sweep's base config.
+    capacities and the ``REPRO_FLEET_NEIGHBOR_K`` sparse-path knob
+    (run.py ``--neighbor-k``) into a sweep's base config.
 
-    Tracing is part of the point identity (the capacities are in the
-    config digest), so traced and untraced results never alias in the
-    store; with the knobs unset the spec is returned untouched and every
-    emitted byte matches an untraced build.
+    All three are part of the point identity (they are config fields in
+    the digest), so traced/untraced and sparse/dense results never alias
+    in the store; with the knobs unset the spec is returned untouched and
+    every emitted byte matches the historical build.
     """
     over = {}
     cap = int(os.environ.get("REPRO_FLEET_TRACE", "0"))
@@ -89,6 +95,10 @@ def apply_trace_env(spec: SweepSpec) -> SweepSpec:
     hop_cap = int(os.environ.get("REPRO_FLEET_TRACE_HOPS", "0"))
     if hop_cap > 0 and spec.base.trace_hop_capacity == 0:
         over["trace_hop_capacity"] = hop_cap
+    nk = int(os.environ.get("REPRO_FLEET_NEIGHBOR_K", "0"))
+    if nk > 0 and spec.base.neighbor_mode == "dense":
+        over["neighbor_mode"] = "sparse"
+        over["neighbor_k"] = nk
     if not over:
         return spec
     return dataclasses.replace(
@@ -130,9 +140,11 @@ def fleet_sweep(spec: SweepSpec, backend: Optional[str] = None,
             BENCH_JSON, f"sweep:{spec.name}",
             build_report(res, meta={"backend": backend,
                                     "num_runs": spec.num_runs},
-                         # per point: a sweep axis may override tick_s
+                         # per point: a sweep axis may override either knob
                          tick_s={pt.label: pt.cfg.tick_s
-                                 for pt in spec.expand()}))
+                                 for pt in spec.expand()},
+                         tx_power_dbm={pt.label: pt.cfg.tx_power_dbm
+                                       for pt in spec.expand()}))
     return res
 
 

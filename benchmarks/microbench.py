@@ -119,6 +119,100 @@ def run_phi_wallclock(ns=(1024, 4096), runs_axis=1, iters=3,
     return rows
 
 
+def run_phi_sparse_wallclock(ns=(1024, 4096, 16384, 65536), k=16,
+                             dense_ns=(1024, 4096), interpret_ns=(256,),
+                             iters=3,
+                             out_json=os.path.join(ART, "BENCH_fleet.json")):
+    """Sparse neighbor-list φ path at scale (DESIGN.md §11).
+
+    Times the epoch-update pipeline the sparse simulator dispatches —
+    spatial-hash neighbor-list build (its own row), then per-edge channel
+    + gather-based φ update over the [N, K] lists — and, where the dense
+    [N, N] path still fits in memory, the dense pipeline on the same
+    positions for a direct crossover row.  One ``kernel_interpret`` row
+    per ``interpret_ns`` size checks the sparse Pallas kernel's lowering
+    (ref vs interpret parity timing, not a perf number).  Rows land under
+    ``microbench_diffusive_phi_sparse`` in ``BENCH_fleet.json``; rank-0
+    guarded like the other producers.
+    """
+    import dataclasses
+
+    from repro.configs.base import SwarmConfig
+    from repro.core.diffusive import phi_update_op, phi_update_op_sparse
+    from repro.fleet import worker_env, write_bench_json
+    from repro.kernels.diffusive_phi import \
+        diffusive_phi_sparse as pl_phi_sparse
+    from repro.swarm.channel import link_state, link_state_sparse
+    from repro.swarm.neighbors import neighbor_lists
+    from repro.swarm.tasks import make_profile
+
+    if worker_env().rank != 0:
+        return []
+    backend = jax.default_backend()
+    key = jax.random.PRNGKey(0)
+    rows = []
+    for n in ns:
+        cfg = dataclasses.replace(SwarmConfig(), neighbor_mode="sparse",
+                                  neighbor_k=k)
+        bpg = make_profile(cfg).bits_per_gflop
+        kp, kf = jax.random.split(jax.random.fold_in(key, n))
+        pos = jax.random.uniform(kp, (n, 2), jnp.float32, 0.0, cfg.area_m)
+        F = jax.random.uniform(kf, (n,), jnp.float32, 100, 500)
+
+        build = jax.jit(lambda p, cfg=cfg: neighbor_lists(p, cfg))
+        build_us = bench(build, pos, iters=iters)
+        rows.append({"stage": "neighbor_build", "n": int(n), "k": int(k),
+                     "backend": backend, "us_per_call": round(build_us, 1)})
+        nbr, valid = build(pos)
+
+        @jax.jit
+        def sparse_epoch(pos, nbr, valid, phi, F, cfg=cfg, bpg=bpg):
+            adj, cap = link_state_sparse(pos, nbr, valid, cfg)
+            dtx = jnp.where(adj, bpg / cap, 1e30)
+            return phi_update_op_sparse(phi, F, adj, nbr, dtx)
+
+        phi_us = bench(sparse_epoch, pos, nbr, valid, F, F, iters=iters)
+        rows.append({"stage": "epoch_sparse", "n": int(n), "k": int(k),
+                     "backend": backend, "us_per_call": round(phi_us, 1)})
+        print(f"diffusive_phi_sparse_n{n},{build_us:.1f},build_k{k}")
+        print(f"diffusive_phi_sparse_n{n},{phi_us:.1f},epoch_k{k}")
+
+        if n in dense_ns:
+            @jax.jit
+            def dense_epoch(pos, phi, F, cfg=cfg, bpg=bpg):
+                adj, cap = link_state(pos, cfg)
+                dtx = jnp.where(adj, bpg / cap, 1e30)
+                return phi_update_op(phi, F, adj, dtx)
+
+            dense_us = bench(dense_epoch, pos, F, F, iters=iters)
+            rows.append({"stage": "epoch_dense", "n": int(n), "k": int(k),
+                         "backend": backend,
+                         "us_per_call": round(dense_us, 1)})
+            print(f"diffusive_phi_sparse_n{n},{dense_us:.1f},dense")
+
+    for n in interpret_ns:
+        kk = jax.random.split(jax.random.fold_in(key, 10_000 + n), 5)
+        F = jax.random.uniform(kk[0], (1, n), jnp.float32, 100, 500)
+        nbr = jax.random.randint(kk[1], (1, n, k), 0, n)
+        ok = jax.random.bernoulli(kk[2], 0.6, (1, n, k))
+        dtx = jnp.where(ok, 1e-3, -1e30)
+        ref_us = bench(jax.jit(ref.diffusive_phi_sparse), 1.0 / F, F, dtx,
+                       nbr, iters=iters)
+        pal_us = bench(lambda a, b, c, d: pl_phi_sparse(a, b, c, d,
+                                                        interpret=True),
+                       1.0 / F, F, dtx, nbr, iters=1)
+        rows.append({"stage": "kernel_interpret", "n": int(n), "k": int(k),
+                     "ref_us": round(ref_us, 1),
+                     "pallas_interpret_us": round(pal_us, 1)})
+        print(f"diffusive_phi_sparse_kernel_n{n},{ref_us:.1f},ref")
+        print(f"diffusive_phi_sparse_kernel_n{n},{pal_us:.1f},"
+              f"pallas_interpret")
+    write_bench_json(out_json, "microbench_diffusive_phi_sparse", rows)
+    print(f"wrote {out_json} (microbench_diffusive_phi_sparse, "
+          f"{len(rows)} rows, backend={backend})")
+    return rows
+
+
 def run_phi_sweep(ns=(256, 1024, 4096), runs_axis=1, iters=2,
                   out_json=os.path.join(ART, "BENCH_fleet.json"),
                   wallclock_ns=(1024, 4096)):
@@ -157,6 +251,11 @@ def run_phi_sweep(ns=(256, 1024, 4096), runs_axis=1, iters=2,
 
 
 if __name__ == "__main__":
+    fast = os.environ.get("REPRO_BENCH_FAST") == "1"
     run()
-    run_phi_sweep(ns=(256,) if os.environ.get("REPRO_BENCH_FAST") == "1"
-                  else (256, 1024, 4096))
+    run_phi_sweep(ns=(256,) if fast else (256, 1024, 4096))
+    if fast:
+        run_phi_sparse_wallclock(ns=(256,), k=8, dense_ns=(256,),
+                                 interpret_ns=(128,))
+    else:
+        run_phi_sparse_wallclock()

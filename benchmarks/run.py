@@ -21,6 +21,9 @@ Flags:
                 BENCH sections gain hop-resolved indices (per-hop
                 transfer-time / link-bits quantiles, queue-wait vs
                 in-flight decomposition)
+  --neighbor-k K  run every fleet sweep on the sparse neighbor-list path
+                (``SwarmConfig.neighbor_mode="sparse"``, ``neighbor_k=K``):
+                the O(N·k) φ epoch update instead of the dense [N, N] one
   --watch [p]   don't run benchmarks: follow a progress.jsonl (default
                 ``artifacts/progress.jsonl``) and render completed/total,
                 points/min and ETA for the sweep currently running —
@@ -70,6 +73,12 @@ def run_benchmarks() -> None:
         print("\n== diffusive_phi at swarm scale (ref vs Pallas interpret)"
               " ==")
         microbench.run_phi_sweep(ns=(256,) if FAST else (256, 1024, 4096))
+        print("\n== diffusive_phi sparse neighbor-list path (O(N·k)) ==")
+        if FAST:
+            microbench.run_phi_sparse_wallclock(
+                ns=(256,), k=8, dense_ns=(256,), interpret_ns=(128,))
+        else:
+            microbench.run_phi_sparse_wallclock()
 
     kw = {"runs": 2} if FAST else {}
 
@@ -128,6 +137,10 @@ def main(argv=None) -> None:
                     help="per-hop telemetry: SwarmConfig.trace_hop_capacity"
                          "=CAPACITY (default 65536) — BENCH sections gain "
                          "hop-resolved transfer indices")
+    ap.add_argument("--neighbor-k", type=int, default=None, metavar="K",
+                    help="run every fleet sweep on the sparse neighbor-list "
+                         "path (SwarmConfig.neighbor_mode='sparse', "
+                         "neighbor_k=K) — the O(N·k) φ epoch update")
     ap.add_argument("--watch", nargs="?", const=PROGRESS_JSONL, default=None,
                     metavar="PROGRESS_JSONL",
                     help="follow a progress file instead of running "
@@ -145,6 +158,8 @@ def main(argv=None) -> None:
         os.environ["REPRO_FLEET_TRACE"] = str(args.trace)
     if args.trace_hops is not None:
         os.environ["REPRO_FLEET_TRACE_HOPS"] = str(args.trace_hops)
+    if args.neighbor_k is not None:
+        os.environ["REPRO_FLEET_NEIGHBOR_K"] = str(args.neighbor_k)
     run_benchmarks()
 
 

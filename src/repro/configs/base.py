@@ -340,6 +340,20 @@ class SwarmConfig:
     # node fault/churn (markov): mean dwell times of the up/down chain
     fault_mean_up_s: float = 30.0
     fault_mean_down_s: float = 5.0
+    # --- neighbor representation (DESIGN.md §11) ---
+    # "dense" keeps the historical [N, N] adjacency/capacity hot path
+    # (bit-compatible with every earlier PR); "sparse" switches the epoch
+    # update to fixed-width [N, K] neighbor lists built by the spatial-hash
+    # search in swarm/neighbors.py — per-epoch cost O(N·k) instead of
+    # O(N²), exact vs dense whenever neighbor_k covers the true max degree
+    # (truncated-degree approximation beyond that).
+    neighbor_mode: str = "dense"             # dense|sparse
+    neighbor_k: int = 16                     # neighbor-list width K
+    # bucket-grid knobs (0 = auto-derived from N, K and the channel range):
+    # candidate radius of the grid search in metres, and the fixed per-cell
+    # candidate capacity of the sorted-grid buckets
+    neighbor_range_m: float = 0.0
+    neighbor_cell_cap: int = 0
     # task profile (illustrative detection CNN, DESIGN.md §3)
     task_layers: int = 60
     task_gflops_total: float = 12.0

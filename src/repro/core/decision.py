@@ -42,3 +42,24 @@ def transfer_decision(queued_gflops: jax.Array, phi: jax.Array,
     has_nbr = jnp.any(adj, axis=1)
     do = has_nbr & ((U - U_star) > gamma)                 # Eq. 13
     return TransferDecision(U, jnp.where(has_nbr, k_star, -1), do)
+
+
+def transfer_decision_sparse(queued_gflops: jax.Array, phi: jax.Array,
+                             adj_e: jax.Array, nbr: jax.Array,
+                             gamma: float) -> TransferDecision:
+    """Eqs. 11-13 over fixed-width neighbor lists (DESIGN.md §11).
+
+    adj_e [N, K] bool, nbr [N, K] int32.  The argmin runs over the K axis
+    and maps back through the list; because the lists are canonically
+    sorted ascending by node id, utilization ties resolve to the lowest
+    node id — the same winner as the dense argmin.
+    """
+    U = utilization(queued_gflops, phi)                   # [N]
+    rows = jnp.arange(U.shape[0])
+    cand = jnp.where(adj_e, U[nbr], BIG)                  # [N, K]
+    slot = jnp.argmin(cand, axis=1)                       # [N]
+    k_star = nbr[rows, slot]
+    U_star = jnp.min(cand, axis=1)
+    has_nbr = jnp.any(adj_e, axis=1)
+    do = has_nbr & ((U - U_star) > gamma)                 # Eq. 13
+    return TransferDecision(U, jnp.where(has_nbr, k_star, -1), do)

@@ -71,6 +71,46 @@ def phi_update_op(phi: jax.Array, F: jax.Array, adj: jax.Array,
     return jnp.where(deg > 0, 1.0 / inv_new, F)
 
 
+def phi_update_sparse(phi: jax.Array, F: jax.Array, adj_e: jax.Array,
+                      nbr: jax.Array, d_tx_e: jax.Array) -> jax.Array:
+    """Eq. 10 over fixed-width neighbor lists (DESIGN.md §11).
+
+    phi [N], F [N], adj_e [N, K] validity/adjacency of the gathered edges,
+    nbr [N, K] neighbor ids, d_tx_e [N, K] per-unit-workload delay on the
+    gathered edges.  Bit-identical to ``phi_update`` whenever the lists
+    cover every dense neighbor (same candidates, same arithmetic; max is
+    order-independent).
+    """
+    inv_phi = 1.0 / phi
+    cand = jnp.where(adj_e, d_tx_e + inv_phi[nbr], NEG)     # [N, K]
+    worst = jnp.max(cand, axis=-1)
+    deg = jnp.sum(adj_e, axis=-1)
+    inv_new = (1.0 / F + worst) / (deg + 1.0)
+    return jnp.where(deg > 0, 1.0 / inv_new, F)
+
+
+def phi_update_op_sparse(phi: jax.Array, F: jax.Array, adj_e: jax.Array,
+                         nbr: jax.Array, d_tx_e: jax.Array) -> jax.Array:
+    """Backend-dispatched ``phi_update_sparse`` (the O(N·k) hot path).
+
+    Routes the gather-max reduction through
+    ``kernels.ops.diffusive_phi_sparse``; accepts [N]/[N,K] or batched
+    [R,N]/[R,N,K] operands.  The isolated-node fallback is applied here,
+    mirroring ``phi_update_op``.
+    """
+    from repro.kernels import ops  # deferred: keep core import-light
+
+    inv_phi = 1.0 / phi
+    dtx_m = jnp.where(adj_e, d_tx_e, NEG)
+    if inv_phi.ndim == 1:
+        inv_new = ops.diffusive_phi_sparse(inv_phi[None], F[None],
+                                           dtx_m[None], nbr[None])[0]
+    else:
+        inv_new = ops.diffusive_phi_sparse(inv_phi, F, dtx_m, nbr)
+    deg = jnp.sum(adj_e, axis=-1)
+    return jnp.where(deg > 0, 1.0 / inv_new, F)
+
+
 def phi_fixpoint(F: jax.Array, adj: jax.Array, d_tx: jax.Array,
                  iters: int = 16, phi0: Optional[jax.Array] = None
                  ) -> Tuple[jax.Array, jax.Array]:

@@ -39,7 +39,8 @@ def latency_cdf(lat_s, qs: Sequence[float] = LATENCY_QS) -> Dict[str, float]:
 
 def point_indices(metrics: Mapping[str, np.ndarray],
                   per_task_latency_s=None,
-                  tick_s: Optional[float] = None) -> Dict:
+                  tick_s: Optional[float] = None,
+                  tx_power_dbm: Optional[float] = None) -> Dict:
     """Paper performance indices for one sweep point's per-run metrics.
 
     ``metrics["avg_latency_s"]`` holds one *mean* latency per Monte-Carlo
@@ -53,7 +54,8 @@ def point_indices(metrics: Mapping[str, np.ndarray],
     (``trace_hop_capacity > 0``) additionally gains the hop-resolved
     indices (per-hop transfer-time/link-bits quantiles, queue-wait vs
     in-flight decomposition — ``tick_s`` converts stall ticks to wall
-    time, see ``repro.trace.aggregate.hop_indices``).
+    time — and, with ``tx_power_dbm``, the airtime-J energy attribution
+    per hop and per link; see ``repro.trace.aggregate.hop_indices``).
     """
     out = {}
     for k, v in metrics.items():
@@ -74,7 +76,7 @@ def point_indices(metrics: Mapping[str, np.ndarray],
         from repro.trace import decode_hops, hop_indices
         out.update(hop_indices(decode_hops(
             metrics["trace_hops"], metrics.get("trace_hop_overflow")),
-            tick_s=tick_s))
+            tick_s=tick_s, tx_power_dbm=tx_power_dbm))
     if per_task_latency_s is not None and len(per_task_latency_s):
         out["task_latency_cdf_s"] = latency_cdf(per_task_latency_s)
     for k in ("jain_fairness", "energy_per_task_j"):
@@ -87,25 +89,32 @@ def point_indices(metrics: Mapping[str, np.ndarray],
 def build_report(results: Mapping[str, Mapping[str, np.ndarray]],
                  meta: Optional[Dict] = None,
                  per_task_latency_s: Optional[Mapping] = None,
-                 tick_s=None) -> Dict:
+                 tick_s=None, tx_power_dbm=None) -> Dict:
     """``{point label: metrics}`` (executor output) → JSON-ready section.
 
     ``per_task_latency_s`` optionally maps point labels to pooled per-task
     latency samples (for the true Fig. 4a CDF); points without an entry
     just omit ``task_latency_cdf_s``.  ``tick_s`` feeds the hop stream's
-    queue-wait/in-flight wall-time decomposition: either one float for
-    the whole sweep or a ``{point label: tick_s}`` mapping (``tick_s`` is
-    an ordinary config field, so a sweep axis may vary it per point).
-    Output is deterministic in the inputs either way.
+    queue-wait/in-flight wall-time decomposition and ``tx_power_dbm`` its
+    airtime-J energy attribution: each is either one float for the whole
+    sweep or a ``{point label: value}`` mapping (both are ordinary config
+    fields, so a sweep axis may vary them per point).  Output is
+    deterministic in the inputs either way.
     """
     lat = per_task_latency_s or {}
-    tick = (tick_s if isinstance(tick_s, Mapping) or tick_s is None
-            else {label: tick_s for label in results})
+
+    def per_label(v):
+        return (v if isinstance(v, Mapping) or v is None
+                else {label: v for label in results})
+
+    tick = per_label(tick_s)
+    txp = per_label(tx_power_dbm)
     return {
         "meta": dict(meta or {}),
-        "points": {label: point_indices(m, lat.get(label),
-                                        tick_s=(tick or {}).get(label))
-                   for label, m in results.items()},
+        "points": {label: point_indices(
+            m, lat.get(label), tick_s=(tick or {}).get(label),
+            tx_power_dbm=(txp or {}).get(label))
+            for label, m in results.items()},
     }
 
 

@@ -10,6 +10,17 @@ the final combine with 1/F and the degree normalization happens on the last
 column tile.
 
 Grid: (R, N/BN, N/BN) — Monte-Carlo batch × row tiles × column tiles.
+
+``diffusive_phi_sparse`` is the O(N·K) neighbor-list variant (DESIGN.md
+§11): the delay/index operands are fixed-width [N, K] gather lists, the
+full 1/φ row rides in VMEM once per run (N fp32 — 256 KB even at
+N = 65,536), and each (BN, BK) tile gathers its neighbors' 1/φ in-kernel.
+The reduction runs over the K grid dimension with the same row-max +
+degree scratch; invalid slots carry the NEG sentinel and lose the max
+exactly like dense off-link columns, so sparse output is bit-identical to
+dense whenever K covers the true degree.
+
+Grid: (R, N/BN, K/BK) — Monte-Carlo batch × row tiles × neighbor tiles.
 """
 from __future__ import annotations
 
@@ -75,4 +86,73 @@ def diffusive_phi(inv_phi, F, d_tx_masked, *, interpret=False):
                         pltpu.VMEM((BN,), jnp.float32)],
         interpret=interpret,
     )(inv_phi, F, d_tx_masked)
+    return out[:, :N]
+
+
+BK = 128  # neighbor-tile width (lane-aligned); K pads up to a BK multiple
+
+
+def _kernel_sparse(inv_phi_ref, f_ref, dtx_ref, nbr_ref, out_ref,
+                   acc_ref, deg_ref):
+    j = pl.program_id(2)
+    nj = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.full_like(acc_ref, NEG)
+        deg_ref[...] = jnp.zeros_like(deg_ref)
+
+    dtx = dtx_ref[0]                             # [BN, BK]; NEG on invalid
+    row = inv_phi_ref[0]                         # [Np] — the full 1/φ row
+    cand = dtx + row[nbr_ref[0]]                 # gather 1/φ_k per slot
+    acc_ref[...] = jnp.maximum(acc_ref[...], jnp.max(cand, axis=1))
+    deg_ref[...] = deg_ref[...] + jnp.sum(
+        (dtx > NEG / 2).astype(jnp.float32), axis=1)
+
+    @pl.when(j == nj - 1)
+    def _finalize():
+        f = f_ref[0]
+        deg = deg_ref[...]
+        inv_new = (1.0 / f + acc_ref[...]) / (deg + 1.0)
+        out_ref[0] = jnp.where(deg > 0, inv_new, 1.0 / f)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def diffusive_phi_sparse(inv_phi, F, d_tx_masked, nbr, *, interpret=False):
+    """inv_phi [R, N] (s/GFLOP), F [R, N], d_tx_masked [R, N, K] (NEG on
+    invalid/off-link slots), nbr [R, N, K] int32 -> inv_phi' [R, N].
+
+    Pads N to a BN multiple and K to a BK multiple internally; pad slots
+    carry the NEG sentinel (and index 0) so they never win the max or
+    count toward the degree.
+    """
+    R, N, K = d_tx_masked.shape
+    Np = (N + BN - 1) // BN * BN
+    Kp = (K + BK - 1) // BK * BK
+    if Np - N:
+        inv_phi = jnp.pad(inv_phi, ((0, 0), (0, Np - N)), constant_values=1.0)
+        F = jnp.pad(F, ((0, 0), (0, Np - N)), constant_values=1.0)
+        d_tx_masked = jnp.pad(d_tx_masked, ((0, 0), (0, Np - N), (0, 0)),
+                              constant_values=NEG)
+        nbr = jnp.pad(nbr, ((0, 0), (0, Np - N), (0, 0)))
+    if Kp - K:
+        d_tx_masked = jnp.pad(d_tx_masked, ((0, 0), (0, 0), (0, Kp - K)),
+                              constant_values=NEG)
+        nbr = jnp.pad(nbr, ((0, 0), (0, 0), (0, Kp - K)))
+    grid = (R, Np // BN, Kp // BK)
+    out = pl.pallas_call(
+        _kernel_sparse,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Np), lambda r, i, j: (r, 0)),       # full 1/φ
+            pl.BlockSpec((1, BN), lambda r, i, j: (r, i)),       # F (rows)
+            pl.BlockSpec((1, BN, BK), lambda r, i, j: (r, i, j)),
+            pl.BlockSpec((1, BN, BK), lambda r, i, j: (r, i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, BN), lambda r, i, j: (r, i)),
+        out_shape=jax.ShapeDtypeStruct((R, Np), inv_phi.dtype),
+        scratch_shapes=[pltpu.VMEM((BN,), jnp.float32),
+                        pltpu.VMEM((BN,), jnp.float32)],
+        interpret=interpret,
+    )(inv_phi, F, d_tx_masked, nbr)
     return out[:, :N]

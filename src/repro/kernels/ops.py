@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention as _pl_decode
 from repro.kernels.diffusive_phi import diffusive_phi as _pl_phi
+from repro.kernels.diffusive_phi import \
+    diffusive_phi_sparse as _pl_phi_sparse
 from repro.kernels.flash_attention import flash_attention as _pl_flash
 from repro.kernels.mamba_scan import mamba_scan as _pl_mamba
 from repro.kernels.rglru_scan import rglru_scan as _pl_rglru
@@ -51,6 +53,14 @@ def diffusive_phi(inv_phi, F, d_tx_masked):
     if m == "ref":
         return ref.diffusive_phi(inv_phi, F, d_tx_masked)
     return _pl_phi(inv_phi, F, d_tx_masked, interpret=(m == "interpret"))
+
+
+def diffusive_phi_sparse(inv_phi, F, d_tx_masked, nbr):
+    m = _mode()
+    if m == "ref":
+        return ref.diffusive_phi_sparse(inv_phi, F, d_tx_masked, nbr)
+    return _pl_phi_sparse(inv_phi, F, d_tx_masked, nbr,
+                          interpret=(m == "interpret"))
 
 
 def rglru_scan(a, b):

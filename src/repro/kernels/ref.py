@@ -29,6 +29,25 @@ def diffusive_phi(inv_phi, F, d_tx_masked):
     return jnp.where(deg > 0, inv_new, 1.0 / F)
 
 
+def diffusive_phi_sparse(inv_phi, F, d_tx_masked, nbr):
+    """Neighbor-list form of Eq. 10: inv_phi [R, N], F [R, N],
+    d_tx_masked [R, N, K] (-inf-ish on invalid/off-link slots),
+    nbr [R, N, K] int32 neighbor ids (0 on invalid slots, masked by the
+    delay sentinel).  Returns inv_phi' [R, N].
+
+    Same arithmetic as ``diffusive_phi`` over the gathered candidates, so
+    the result is bit-identical to the dense oracle whenever the lists
+    cover every dense neighbor (max is order-independent and the masked
+    slots lose exactly like dense off-link columns).
+    """
+    p = jax.vmap(lambda v, idx: v[idx])(inv_phi, nbr)       # [R, N, K]
+    cand = d_tx_masked + p
+    worst = jnp.max(cand, axis=-1)
+    deg = jnp.sum(d_tx_masked > NEG / 2, axis=-1).astype(inv_phi.dtype)
+    inv_new = (1.0 / F + worst) / (deg + 1.0)
+    return jnp.where(deg > 0, inv_new, 1.0 / F)
+
+
 # ---------------------------------------------------------------------------
 # flash attention (GQA, causal/window), prefill/train
 # ---------------------------------------------------------------------------

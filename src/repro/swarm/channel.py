@@ -145,6 +145,82 @@ def nakagami(key, dist_m: jax.Array, cfg: SwarmConfig) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# per-edge pathloss (sparse neighbor-list path, DESIGN.md §11)
+#
+# Every model exposes  pathloss_edges_db(key, dist [N,K], src [N,K],
+# dst [N,K], cfg) -> [N,K] dB  and is selected through the
+# ``scenario.CHANNEL_EDGE_MODELS`` registry.  Deterministic models are the
+# exact dense formulas applied elementwise (bit-identical per pair);
+# stochastic models replace the dense [N,N] matrix draw with per-edge
+# draws keyed on the *unordered* node pair — symmetric by construction and
+# identically distributed to the dense marginals, but a different PRNG
+# stream, so sparse-vs-dense parity is exact only for the deterministic
+# channels.  ``log_normal_corr`` (node-field Cholesky) has no sparse
+# counterpart and is deliberately absent from the registry.
+# ---------------------------------------------------------------------------
+
+
+def _edge_normal(key, src, dst, draws: int = 1) -> jax.Array:
+    """Per-edge standard normals, symmetric in (src, dst): the edge key is
+    the epoch key folded with (min id, max id) — double fold_in rather than
+    a flat ``min·N + max`` edge id, which overflows int32 at N = 65,536.
+    src/dst [N, K] -> [N, K] (draws=1) or [N, K, draws]."""
+    lo = jnp.minimum(src, dst)
+    hi = jnp.maximum(src, dst)
+
+    def draw(l, h):
+        k = jax.random.fold_in(jax.random.fold_in(key, l), h)
+        return jax.random.normal(k, (draws,), jnp.float32)
+
+    z = jax.vmap(jax.vmap(draw))(lo, hi)
+    return z[..., 0] if draws == 1 else z
+
+
+def _edge_gamma(key, src, dst, m) -> jax.Array:
+    """Per-edge Gamma(m, 1/m) (unit mean), symmetric in (src, dst)."""
+    lo = jnp.minimum(src, dst)
+    hi = jnp.maximum(src, dst)
+
+    def draw(l, h):
+        k = jax.random.fold_in(jax.random.fold_in(key, l), h)
+        return jax.random.gamma(k, m, (), jnp.float32) / m
+
+    return jax.vmap(jax.vmap(draw))(lo, hi)
+
+
+def two_ray_edges(key, dist_m, src, dst, cfg: SwarmConfig) -> jax.Array:
+    del key, src, dst
+    return two_ray_pathloss_db(dist_m, cfg.altitude_m, cfg.altitude_m)
+
+
+def free_space_edges(key, dist_m, src, dst, cfg: SwarmConfig) -> jax.Array:
+    del src, dst
+    return free_space(key, dist_m, cfg)
+
+
+def log_normal_edges(key, dist_m, src, dst, cfg: SwarmConfig) -> jax.Array:
+    base = _log_distance_db(dist_m, cfg)
+    return base + _edge_normal(key, src, dst) * cfg.shadowing_sigma_db
+
+
+def rician_edges(key, dist_m, src, dst, cfg: SwarmConfig) -> jax.Array:
+    base = _log_distance_db(dist_m, cfg)
+    K = jnp.power(10.0, cfg.rician_k_db / 10.0)
+    s = jnp.sqrt(1.0 / (2.0 * (K + 1.0)))
+    z = _edge_normal(key, src, dst, draws=2)
+    x = jnp.sqrt(K / (K + 1.0)) + s * z[..., 0]
+    y = s * z[..., 1]
+    g = x * x + y * y
+    return base - 10.0 * jnp.log10(jnp.maximum(g, 1e-12))
+
+
+def nakagami_edges(key, dist_m, src, dst, cfg: SwarmConfig) -> jax.Array:
+    base = _log_distance_db(dist_m, cfg)
+    g = _edge_gamma(key, src, dst, jnp.float32(cfg.nakagami_m))
+    return base - 10.0 * jnp.log10(jnp.maximum(g, 1e-12))
+
+
+# ---------------------------------------------------------------------------
 # SNR / capacity / adjacency
 # ---------------------------------------------------------------------------
 
@@ -182,3 +258,55 @@ def link_state(pos: jax.Array, cfg: SwarmConfig, key=None, pathloss_fn=None):
     adj = (snr >= cfg.snr_min_db) & ~eye
     cap = jnp.where(adj, capacity_bps(snr, cfg), 1.0)
     return adj, cap
+
+
+def _edge_distance(pos: jax.Array, src: jax.Array, dst: jax.Array
+                   ) -> jax.Array:
+    """Distances of the gathered (src, dst) pairs — the same ``+1e-9``
+    guard as ``pairwise_distance`` so shared pairs are bit-identical."""
+    d = pos[src] - pos[dst]
+    return jnp.sqrt(jnp.sum(jnp.square(d), axis=-1) + 1e-9)
+
+
+def link_state_sparse(pos: jax.Array, nbr: jax.Array, valid: jax.Array,
+                      cfg: SwarmConfig, key=None, pathloss_fn=None):
+    """Neighbor-list twin of ``link_state``: pathloss/SNR/capacity computed
+    only on the gathered [N, K] pairs.
+
+    ``pathloss_fn`` is a per-edge model (``*_edges`` above, selected via
+    ``scenario.get_channel_edges``).  Returns (adj [N,K] bool, capacity
+    [N,K] bit/s) with the same conventions as the dense path: adj folds in
+    the validity mask (which already excludes self), capacity floors at
+    1.0 off-link.
+    """
+    if pathloss_fn is None:
+        pathloss_fn = two_ray_edges
+    n, k = nbr.shape
+    src = jnp.broadcast_to(jnp.arange(n)[:, None], (n, k))
+    dist = _edge_distance(pos, src, nbr)
+    snr = snr_from_pathloss_db(pathloss_fn(key, dist, src, nbr, cfg), cfg)
+    adj = valid & (snr >= cfg.snr_min_db)
+    cap = jnp.where(adj, capacity_bps(snr, cfg), 1.0)
+    return adj, cap
+
+
+def edge_rate(pos: jax.Array, dst: jax.Array, cfg: SwarmConfig, key=None,
+              pathloss_fn=None) -> jax.Array:
+    """Per-node link rate toward ``dst`` [N] — the sparse replacement for
+    the dense ``cap[rows, tx_dst]`` lookup in transfer progress.
+
+    Same epoch ``key`` and per-edge model as ``link_state_sparse``, so a
+    stochastic draw for the pair (i, dst_i) is exactly the draw the
+    decision stage saw; same 1.0 floor where the link is below threshold
+    or points at self (a stale destination behaves like the dense path's
+    floored capacity entry — the transfer stalls until the link returns).
+    """
+    if pathloss_fn is None:
+        pathloss_fn = two_ray_edges
+    n = pos.shape[0]
+    rows = jnp.arange(n)
+    dist = _edge_distance(pos, rows, dst)[:, None]
+    snr = snr_from_pathloss_db(
+        pathloss_fn(key, dist, rows[:, None], dst[:, None], cfg), cfg)[:, 0]
+    ok = (snr >= cfg.snr_min_db) & (dst != rows)
+    return jnp.where(ok, capacity_bps(snr, cfg), 1.0)

@@ -43,9 +43,12 @@ class FaultModel(NamedTuple):
     step: Callable   # (alive, key, cfg) -> alive' [N] bool
 
 
-# channel models are bare pathloss callables: (key, dist [N,N], cfg) -> dB
+# channel models are bare pathloss callables: (key, dist [N,N], cfg) -> dB;
+# edge-channel models are their sparse twins (key, dist [N,K], src [N,K],
+# dst [N,K], cfg) -> dB for the neighbor-list path (DESIGN.md §11)
 MOBILITY_MODELS: Dict[str, MobilityModel] = {}
 CHANNEL_MODELS: Dict[str, Callable] = {}
+CHANNEL_EDGE_MODELS: Dict[str, Callable] = {}
 FAULT_MODELS: Dict[str, FaultModel] = {}
 
 
@@ -63,6 +66,11 @@ def register_mobility(name: str, init: Callable, step: Callable):
 
 def register_channel(name: str, pathloss_fn: Callable):
     return _register(CHANNEL_MODELS, "channel", name, pathloss_fn)
+
+
+def register_channel_edges(name: str, pathloss_edges_fn: Callable):
+    return _register(CHANNEL_EDGE_MODELS, "edge channel", name,
+                     pathloss_edges_fn)
 
 
 def register_fault(name: str, init: Callable, step: Callable):
@@ -88,6 +96,19 @@ def get_channel(cfg: SwarmConfig) -> Callable:
 
 def get_fault(cfg: SwarmConfig) -> FaultModel:
     return _lookup(FAULT_MODELS, "fault", cfg.fault_model)
+
+
+def get_channel_edges(cfg: SwarmConfig) -> Callable:
+    """Per-edge pathloss model for ``neighbor_mode="sparse"``.  Channels
+    without a sparse implementation (``log_normal_corr`` needs the full
+    node-field Cholesky) fail loudly here rather than silently falling
+    back to dense."""
+    if cfg.channel_model not in CHANNEL_EDGE_MODELS:
+        raise KeyError(
+            f"channel model {cfg.channel_model!r} has no per-edge (sparse) "
+            f"implementation; registered: {sorted(CHANNEL_EDGE_MODELS)} — "
+            f"use neighbor_mode='dense' or register_channel_edges()")
+    return CHANNEL_EDGE_MODELS[cfg.channel_model]
 
 
 # ---------------------------------------------------------------------------
@@ -167,6 +188,13 @@ register_channel("log_normal", _channel.log_normal)
 register_channel("log_normal_corr", _channel.log_normal_corr)
 register_channel("rician", _channel.rician)
 register_channel("nakagami", _channel.nakagami)
+
+# sparse per-edge twins (no log_normal_corr: see get_channel_edges)
+register_channel_edges("two_ray", _channel.two_ray_edges)
+register_channel_edges("free_space", _channel.free_space_edges)
+register_channel_edges("log_normal", _channel.log_normal_edges)
+register_channel_edges("rician", _channel.rician_edges)
+register_channel_edges("nakagami", _channel.nakagami_edges)
 
 register_fault("none", _fault_none_init, _fault_none_step)
 register_fault("markov", _fault_markov_init, _fault_markov_step)

@@ -27,15 +27,17 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import SwarmConfig
-from repro.core.decision import transfer_decision
-from repro.core.diffusive import phi_update_op
+from repro.core.decision import transfer_decision, transfer_decision_sparse
+from repro.core.diffusive import phi_update_op, phi_update_op_sparse
 from repro.core.early_exit import (congestion_update, exit_accuracy,
                                    exit_boundary_layers, exit_label)
 from repro.core.early_exit import CongestionState
 from repro.swarm import transfer as transfer_mod
-from repro.swarm.channel import link_state
+from repro.swarm.channel import edge_rate, link_state, link_state_sparse
+from repro.swarm.neighbors import mask_neighbors, neighbor_lists
 from repro.swarm.queues import head_slot, push, queued_gflops
-from repro.swarm.scenario import (burst_arrivals, get_channel, get_fault,
+from repro.swarm.scenario import (burst_arrivals, get_channel,
+                                  get_channel_edges, get_fault,
                                   get_mobility, mask_adjacency)
 from repro.swarm.tasks import TaskProfile, make_profile
 from repro.trace import record as trace_record
@@ -232,6 +234,68 @@ def _strategy_decision(st, strategy, adj, d_tx, T, key, cfg: SwarmConfig):
     return do, tgt, phi
 
 
+def _strategy_decision_sparse(st, strategy, adj_e, nbr, d_tx_e, T, key,
+                              cfg: SwarmConfig):
+    """Neighbor-list twin of ``_strategy_decision``: every per-strategy
+    reduction runs over the K axis and maps back through ``nbr``.
+
+    Offload coins reuse the dense keys/shapes, so *whether* a node
+    offloads is bit-identical to dense; Greedy/Distributed targets match
+    too (id-sorted lists preserve the lowest-index tie-break).  Only the
+    Random/RandomAcyclic *target* draws differ — their gumbel field is
+    per-slot [N, K] instead of per-node-pair [N, N], an intentionally
+    different stream (still uniform over the same neighbor sets).
+    """
+    n = st["F"].shape[0]
+    k1, k2, k3 = jax.random.split(key, 3)
+    head, has = head_slot(st)
+    rows = jnp.arange(n)
+    has_nbr = jnp.any(adj_e, axis=1)
+    K = nbr.shape[1]
+
+    # ---- Distributed (ours): Eqs. 10-13, kernel-dispatched ----------------
+    phi = phi_update_op_sparse(st["phi"], st["F"], adj_e, nbr, d_tx_e)
+    dec = transfer_decision_sparse(T, phi, adj_e, nbr, cfg.gamma)
+    dist = (dec.transfer, dec.target)
+
+    # ---- Greedy: least instantaneous load, w.p. p_greedy -----------------
+    cand = jnp.where(adj_e, T[nbr], BIG)
+    g_tgt = nbr[rows, jnp.argmin(cand, axis=1)]
+    g_less = jnp.min(cand, axis=1) < T
+    g_do = (jax.random.bernoulli(k1, cfg.greedy_offload_p, (n,))
+            & has_nbr & g_less)
+    greedy = (g_do, g_tgt)
+
+    # ---- Random: uniform neighbor, w.p. 0.2 ------------------------------
+    gum = jax.random.gumbel(k2, (n, K))
+    r_tgt = nbr[rows, jnp.argmax(jnp.where(adj_e, gum, -BIG), axis=1)]
+    r_do = jax.random.bernoulli(jax.random.fold_in(k2, 1),
+                                cfg.random_offload_p, (n,)) & has_nbr
+    random_ = (r_do, r_tgt)
+
+    # ---- RandomAcyclic: uniform unvisited neighbor, w.p. 0.1 -------------
+    # the visited sets stay dense [N, Q, N] (a bitset redesign is ROADMAP
+    # work); the epoch cost here is only the [N, K] gather of head rows
+    visited_head = st["q_visited"][rows, head]              # [N, N]
+    amask = adj_e & ~visited_head[rows[:, None], nbr]
+    a_has = jnp.any(amask, axis=1)
+    a_tgt = nbr[rows, jnp.argmax(
+        jnp.where(amask, jax.random.gumbel(k3, (n, K)), -BIG), axis=1)]
+    a_do = jax.random.bernoulli(jax.random.fold_in(k3, 1),
+                                cfg.random_acyclic_p, (n,)) & a_has
+    acyc = (a_do, a_tgt)
+
+    local = (jnp.zeros((n,), bool), jnp.zeros((n,), jnp.int32))
+
+    do = jax.lax.switch(strategy, [
+        lambda: local[0], lambda: random_[0], lambda: acyc[0],
+        lambda: greedy[0], lambda: dist[0]])
+    tgt = jax.lax.switch(strategy, [
+        lambda: local[1], lambda: random_[1], lambda: acyc[1],
+        lambda: greedy[1], lambda: dist[1]])
+    return do, tgt, phi
+
+
 def _epoch(st, key, epoch_idx, strategy, cfg: SwarmConfig,
            profile: TaskProfile):
     t0 = epoch_idx.astype(jnp.float32) * cfg.decision_period_s
@@ -243,17 +307,31 @@ def _epoch(st, key, epoch_idx, strategy, cfg: SwarmConfig,
     k_ch = jax.random.fold_in(key, 13)
     k_fault = jax.random.fold_in(key, 17)
 
-    # 1. refresh the scenario at epoch start
+    # 1. refresh the scenario at epoch start; 2. strategy decision (Alg. 1
+    #    lines 2-5).  neighbor_mode is static config, so the branch picks
+    #    the compiled representation: dense [N, N] (the historical
+    #    bit-exact path) or [N, K] neighbor lists (O(N·k), DESIGN.md §11)
     st = dict(st)
     st["alive"] = get_fault(cfg).step(st["alive"], k_fault, cfg)
     st["mob"], pos = get_mobility(cfg).step(st["mob"], k_mob, cfg, t0)
-    adj, cap = link_state(pos, cfg, key=k_ch, pathloss_fn=get_channel(cfg))
-    adj = mask_adjacency(adj, st["alive"])
-    d_tx = jnp.where(adj, profile.bits_per_gflop / cap, BIG)
-
-    # 2. strategy decision (Alg. 1 lines 2-5)
     T = queued_gflops(st, profile)
-    do, tgt, phi = _strategy_decision(st, strategy, adj, d_tx, T, kd, cfg)
+    sparse = cfg.neighbor_mode == "sparse"
+    if sparse:
+        edge_fn = get_channel_edges(cfg)
+        nbr, valid = neighbor_lists(pos, cfg)
+        valid = mask_neighbors(valid, nbr, st["alive"])
+        adj_e, cap_e = link_state_sparse(pos, nbr, valid, cfg, key=k_ch,
+                                         pathloss_fn=edge_fn)
+        d_tx_e = jnp.where(adj_e, profile.bits_per_gflop / cap_e, BIG)
+        do, tgt, phi = _strategy_decision_sparse(st, strategy, adj_e, nbr,
+                                                 d_tx_e, T, kd, cfg)
+    else:
+        adj, cap = link_state(pos, cfg, key=k_ch,
+                              pathloss_fn=get_channel(cfg))
+        adj = mask_adjacency(adj, st["alive"])
+        d_tx = jnp.where(adj, profile.bits_per_gflop / cap, BIG)
+        do, tgt, phi = _strategy_decision(st, strategy, adj, d_tx, T, kd,
+                                          cfg)
     st["phi"] = phi
 
     # 3. congestion-aware early exit (Alg. 1 lines 10-11, Eqs. 14-16)
@@ -274,12 +352,20 @@ def _epoch(st, key, epoch_idx, strategy, cfg: SwarmConfig,
     elig = do & has & ~st["tx_active"] & (tgt >= 0)
     st = transfer_mod.initiate(st, elig, tgt, t0, profile)
 
-    # 5. fine ticks
+    # 5. fine ticks.  tx_dst is frozen between decisions, so the sparse
+    #    path resolves each node's outgoing link rate [N] once per epoch
+    #    instead of carrying the [N, N] capacity matrix into the scan —
+    #    same epoch key, so stochastic draws match the decision stage's
+    if sparse:
+        link = edge_rate(pos, st["tx_dst"], cfg, key=k_ch,
+                         pathloss_fn=edge_fn)
+    else:
+        link = cap
     n_ticks = int(round(cfg.decision_period_s / cfg.tick_s))
 
     def tick_body(st, i):
         t_now = t0 + (i.astype(jnp.float32) + 1.0) * cfg.tick_s
-        st = _tick(st, jax.random.fold_in(kt, i), cfg, profile, cap,
+        st = _tick(st, jax.random.fold_in(kt, i), cfg, profile, link,
                    st["alive"], t_now)
         return st, None
 

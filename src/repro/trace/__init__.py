@@ -19,10 +19,11 @@ default 0 no trace state exists anywhere and the simulator is
 bit-identical to an untraced build.
 """
 from repro.trace import schema
-from repro.trace.aggregate import (exit_label_histogram, hop_histogram,
-                                   hop_indices, int_histogram,
-                                   jain_fairness, link_bits,
-                                   quantile_summary, trace_indices)
+from repro.trace.aggregate import (exit_label_histogram, hop_airtime_s,
+                                   hop_energy_j, hop_histogram, hop_indices,
+                                   int_histogram, jain_fairness, link_bits,
+                                   link_energy_j, quantile_summary,
+                                   trace_indices)
 from repro.trace.decode import decode, decode_hops, split_runs
 from repro.trace.export import (chrome_trace_events, hop_trace_events,
                                 write_chrome_trace)
@@ -31,6 +32,7 @@ from repro.trace.record import (init_hops, init_trace, traced_push,
 
 __all__ = ["schema", "decode", "decode_hops", "split_runs",
            "trace_indices", "hop_indices", "link_bits",
+           "hop_airtime_s", "hop_energy_j", "link_energy_j",
            "quantile_summary", "jain_fairness",
            "hop_histogram", "exit_label_histogram", "int_histogram",
            "chrome_trace_events", "hop_trace_events", "write_chrome_trace",

@@ -80,8 +80,8 @@ def trace_indices(dec: Mapping) -> Dict:
     }
 
 
-def link_bits(hdec: Mapping) -> Dict[str, float]:
-    """Total bits shipped per directed link, keyed ``"src->dst"``.
+def _link_sums(hdec: Mapping, weights) -> Dict[str, float]:
+    """Sum ``weights`` per directed link, keyed ``"src->dst"``.
 
     Vectorized (a pooled point can hold millions of hop rows): groupby on
     the combined (src, dst) key via ``np.unique`` + weighted bincount.
@@ -92,19 +92,56 @@ def link_bits(hdec: Mapping) -> Dict[str, float]:
         return {}
     n = int(max(src.max(), dst.max())) + 1
     uniq, inv = np.unique(src * n + dst, return_inverse=True)
-    sums = np.bincount(inv, weights=np.asarray(hdec["bits"], np.float64))
+    sums = np.bincount(inv, weights=np.asarray(weights, np.float64))
     return {f"{int(k // n)}->{int(k % n)}": float(s)
             for k, s in zip(uniq, sums)}
 
 
-def hop_indices(hdec: Mapping, tick_s: Optional[float] = None) -> Dict:
+def link_bits(hdec: Mapping) -> Dict[str, float]:
+    """Total bits shipped per directed link, keyed ``"src->dst"``."""
+    return _link_sums(hdec, hdec["bits"])
+
+
+def hop_airtime_s(hdec: Mapping, tick_s: float) -> np.ndarray:
+    """Per-hop radio airtime: wall transfer time minus the stalled ticks
+    (fault stalls + post-arrival contention waits), i.e. the ticks the
+    sender's radio actually transmitted."""
+    return (np.asarray(hdec["transfer_time_s"], np.float64)
+            - np.asarray(hdec["stall_ticks"], np.float64) * float(tick_s))
+
+
+def hop_energy_j(hdec: Mapping, tick_s: float,
+                 tx_power_dbm: float) -> np.ndarray:
+    """Per-hop transmit energy: airtime × linear transmit power.
+
+    This is the HopRecord-side attribution of the simulator's ``e_tx``
+    accumulator (which adds ``tx_w · tick`` per flying tick): when every
+    transfer delivers before sim end, the sum over hops equals ``e_tx``
+    exactly — the join the per-hop energy test pins.
+    """
+    tx_w = 10.0 ** (float(tx_power_dbm) / 10.0) * 1e-3
+    return hop_airtime_s(hdec, tick_s) * tx_w
+
+
+def link_energy_j(hdec: Mapping, tick_s: float,
+                  tx_power_dbm: float) -> Dict[str, float]:
+    """Total transmit joules per directed link, keyed ``"src->dst"`` —
+    the airtime-J-per-link map the energy-budget analyses consume."""
+    return _link_sums(hdec, hop_energy_j(hdec, tick_s, tx_power_dbm))
+
+
+def hop_indices(hdec: Mapping, tick_s: Optional[float] = None,
+                tx_power_dbm: Optional[float] = None) -> Dict:
     """Decoded HopRecords → the JSON-ready hop-resolved report section.
 
     ``tick_s`` converts ``stall_ticks`` into the queue-wait vs in-flight
-    wall-time decomposition; without it the stall accounting stays in
-    ticks and the seconds-valued entries are ``None`` (keys stable either
-    way).  ``hop_count`` counts *delivered* hops — transfers still in
-    flight at sim end never wrote a record and are not overflow.
+    wall-time decomposition; ``tx_power_dbm`` additionally joins the hop
+    stream with the transmit power into the per-hop / per-link airtime
+    energy attribution (hop energy = (transfer time − stall ticks·tick) ×
+    linear tx power).  Without them the corresponding entries are ``None``
+    (keys stable either way).  ``hop_count`` counts *delivered* hops —
+    transfers still in flight at sim end never wrote a record and are not
+    overflow.
     """
     t = hdec["transfer_time_s"]
     stall = hdec["stall_ticks"]
@@ -122,9 +159,21 @@ def hop_indices(hdec: Mapping, tick_s: Optional[float] = None) -> Dict:
             hdec["boundary_layer"]),
         "hop_queue_wait_s_quantiles": None,
         "hop_in_flight_s_quantiles": None,
+        "hop_energy_j_quantiles": None,
+        "link_energy_j_quantiles": None,
+        "tx_airtime_total_s": None,
+        "tx_energy_total_j": None,
     }
     if tick_s is not None and t.size:
         wait = stall.astype(np.float64) * float(tick_s)
         out["hop_queue_wait_s_quantiles"] = quantile_summary(wait)
         out["hop_in_flight_s_quantiles"] = quantile_summary(t - wait)
+        out["tx_airtime_total_s"] = float(hop_airtime_s(hdec, tick_s).sum())
+        if tx_power_dbm is not None:
+            e = hop_energy_j(hdec, tick_s, tx_power_dbm)
+            le = link_energy_j(hdec, tick_s, tx_power_dbm)
+            out["hop_energy_j_quantiles"] = quantile_summary(e)
+            out["link_energy_j_quantiles"] = quantile_summary(
+                list(le.values()))
+            out["tx_energy_total_j"] = float(e.sum())
     return out

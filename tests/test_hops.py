@@ -18,8 +18,9 @@ from repro.fleet import (ResultStore, SweepInterrupted, SweepSpec,
 from repro.swarm import DISTRIBUTED, make_profile
 from repro.swarm import simulator as sim
 from repro.swarm import transfer as transfer_mod
-from repro.trace import (decode, decode_hops, hop_indices, schema,
-                         split_runs, trace_indices)
+from repro.trace import (decode, decode_hops, hop_airtime_s, hop_energy_j,
+                         hop_indices, link_energy_j, schema, split_runs,
+                         trace_indices)
 
 KEY = jax.random.PRNGKey(0)
 N, RUNS = 8, 6
@@ -235,6 +236,53 @@ def test_avg_transfer_time_uses_delivered_denominator():
     # delivered mean is the delivered transfer's time — not halved by the
     # still-in-flight initiation
     assert out["avg_transfer_time_s"] == pytest.approx(tick)
+
+
+def test_hop_energy_join_reproduces_e_tx():
+    """Per-hop airtime-J attribution joins back to the scalar ``e_tx``
+    accumulator exactly once every transfer delivers: both contenders pay
+    two flying ticks of transmit power; the loser's extra stalled tick
+    costs wall time but no energy."""
+    cfg = dataclasses.replace(SwarmConfig(), num_workers=3,
+                              trace_hop_capacity=64)
+    tick = cfg.tick_s
+    tx_w = 10.0 ** (cfg.tx_power_dbm / 10.0) * 1e-3
+    st, cap, alive = _contention_state(cfg, bits=100.0,
+                                       rate=100.0 / (2 * tick))
+    for i in range(1, 8):
+        st = transfer_mod.progress(st, cap, alive, cfg, i * tick)
+    assert float(st["tx_delivered"]) == 2.0
+    hdec = decode_hops(np.asarray(st["trace_hops"]))
+    air = hop_airtime_s(hdec, tick)
+    e = hop_energy_j(hdec, tick, cfg.tx_power_dbm)
+    np.testing.assert_allclose(e, air * tx_w)
+    assert e.sum() == pytest.approx(float(st["e_tx"]))
+    # the stall is excluded: the loser's wall clock exceeds its airtime
+    assert np.any(air < hdec["transfer_time_s"])
+    # per-link rollup is the same join, grouped by directed link
+    le = link_energy_j(hdec, tick, cfg.tx_power_dbm)
+    assert set(le) == {"0->2", "1->2"}
+    assert sum(le.values()) == pytest.approx(float(st["e_tx"]))
+
+
+def test_hop_energy_in_report_and_schema(hopped):
+    """``tx_power_dbm`` fills the airtime-energy entries; without it the
+    keys are present but None (stable BENCH schema either way)."""
+    from repro.fleet import build_report
+    doc = build_report({"pt": hopped}, tick_s=CFG.tick_s,
+                       tx_power_dbm=CFG.tx_power_dbm)["points"]["pt"]
+    assert doc["hop_energy_j_quantiles"]["p50"] > 0
+    assert doc["link_energy_j_quantiles"]["p50"] > 0
+    assert doc["tx_energy_total_j"] > 0
+    assert doc["tx_airtime_total_s"] > 0
+    tx_w = 10.0 ** (CFG.tx_power_dbm / 10.0) * 1e-3
+    assert doc["tx_energy_total_j"] == pytest.approx(
+        doc["tx_airtime_total_s"] * tx_w)
+    bare = build_report({"pt": hopped}, tick_s=CFG.tick_s)["points"]["pt"]
+    assert sorted(bare) == sorted(doc)
+    assert bare["tx_airtime_total_s"] is not None   # needs only tick_s
+    assert bare["tx_energy_total_j"] is None
+    assert bare["hop_energy_j_quantiles"] is None
 
 
 def test_trace_indices_schema_is_stable():

@@ -30,7 +30,19 @@ aggregate indices into ``artifacts/BENCH_fleet.json``.  Env knobs:
                             SwarmConfig.neighbor_mode="sparse",
                             neighbor_k=K (run.py --neighbor-k sets it) —
                             the O(N·k) φ epoch update, DESIGN.md §11
+  REPRO_FLEET_TRACE_STATE=E        flight recorder: run every sweep with
+                                   SwarmConfig.trace_state_every = E
+                                   (run.py --trace-state sets it) — BENCH
+                                   sections gain φ-convergence curves,
+                                   queue-depth heatmaps, energy-drain
+                                   trajectories (DESIGN.md §12)
+  REPRO_FLEET_TRACE_STATE_NODES=M  node subsample of the state stream
+                                   (first M nodes; 0 = all)
   REPRO_FULL_RUNS=1         the paper's 50 Monte-Carlo runs (default 16)
+
+Every ``fleet_sweep`` additionally records each point's compile/execute
+wall-clock spans into the ``profile`` section of BENCH_fleet.json
+(``benchmarks/perf_gate.py`` gates CI on the execute spans).
 
 Multi-host mode: with the ``REPRO_FLEET_*`` rank/world env contract set
 (``fleet/dispatch.py``), every figure sweep runs as this rank's worker
@@ -99,6 +111,12 @@ def apply_trace_env(spec: SweepSpec) -> SweepSpec:
     if nk > 0 and spec.base.neighbor_mode == "dense":
         over["neighbor_mode"] = "sparse"
         over["neighbor_k"] = nk
+    se = int(os.environ.get("REPRO_FLEET_TRACE_STATE", "0"))
+    if se > 0 and spec.base.trace_state_every == 0:
+        over["trace_state_every"] = se
+        sn = int(os.environ.get("REPRO_FLEET_TRACE_STATE_NODES", "0"))
+        if sn > 0:
+            over["trace_state_nodes"] = sn
     if not over:
         return spec
     return dataclasses.replace(
@@ -145,7 +163,55 @@ def fleet_sweep(spec: SweepSpec, backend: Optional[str] = None,
                                  for pt in spec.expand()},
                          tx_power_dbm={pt.label: pt.cfg.tx_power_dbm
                                        for pt in spec.expand()}))
+        payload = _profile_payload(spec, res, backend)
+        if payload:
+            # merge per sweep name: profile is the one BENCH section with
+            # wall-clock content, accumulated across producers (the perf
+            # gate compares it against the committed baseline)
+            from repro.fleet.report import load_bench_json
+            merged = dict(load_bench_json(BENCH_JSON).get("profile", {}))
+            merged[spec.name] = payload
+            write_bench_json(BENCH_JSON, "profile", merged)
     return res
+
+
+def _profile_payload(spec: SweepSpec, res: Dict[str, Dict],
+                     backend: str) -> Dict:
+    """Per-point compile/execute wall-clock spans of one finished sweep.
+
+    The single-process ``execute`` path carries ``_compile_s`` /
+    ``_execute_s`` pseudo-metrics in ``res``; a dispatched sweep's results
+    come back clean from the store, so the spans are recovered from the
+    workers' ``point`` rows in progress.jsonl (last row per label wins —
+    that's the worker that actually computed it).  Cache-hit points record
+    ``cached: true`` with no spans: a hit cost no compile or execute time,
+    and the perf gate skips it.
+    """
+    from repro.fleet.dispatch import read_progress
+
+    prog: Dict[str, Dict] = {}
+    for row in read_progress(PROGRESS_JSONL):
+        if row.get("event") == "point" and row.get("label"):
+            prog[row["label"]] = row
+    payload = {}
+    for label, m in res.items():
+        entry = {"backend": backend, "cached": True,
+                 "wall_s": None, "compile_s": None, "execute_s": None}
+        if m.get("_execute_s") is not None:
+            entry.update(cached=False,
+                         wall_s=round(float(m["_wall_s"]), 3),
+                         compile_s=round(float(m["_compile_s"]), 3),
+                         execute_s=round(float(m["_execute_s"]), 3))
+        elif "_wall_s" in m:
+            entry["wall_s"] = round(float(m["_wall_s"]), 3)
+        elif label in prog:     # dispatched: spans live in progress rows
+            row = prog[label]
+            entry.update(cached=bool(row.get("cached", False)),
+                         wall_s=row.get("wall_s"),
+                         compile_s=row.get("compile_s"),
+                         execute_s=row.get("execute_s"))
+        payload[label] = entry
+    return payload
 
 
 def timed_sweep(cfg: SwarmConfig, strategies: Sequence[int], n: int,

@@ -1,0 +1,85 @@
+"""Flight-recorder figure exports (DESIGN.md §12): φ-convergence curves
+and queue-depth heatmaps from the per-epoch swarm-state stream.
+
+The figure sweeps (fig3-7) report end-of-mission scalars; the paper's
+*dynamics* story — how fast the diffusive metric settles and how queue
+load redistributes over the mission — needs the epoch-resolved state
+stream.  This exporter runs (or cache-hits, through the content-addressed
+store) one state-traced sweep over the strategies and emits:
+
+  * ``fig_state_phi.csv`` — shared epoch grid in column 0, one
+    φ-residual column per strategy (run-mean RMS of φ_t − φ_final over
+    the sampled nodes): overlaid, the curves are the φ-convergence
+    figure, with the ε = 5 % crossing per strategy printed alongside;
+  * ``fig_state_queue_heatmap.csv`` — long-form
+    ``strategy,epoch,node,depth`` rows of the run-mean queue-depth
+    heatmap (epoch-downsampled to ≤ 128 rows by the aggregator).
+
+Both files come from epoch-indexed buffers that ride the normal fleet
+path, so a cache hit, a resumed sweep or a multi-worker dispatch emit
+identical bytes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+
+from benchmarks.common import ART, DEFAULT_RUNS, fleet_sweep, write_csv
+from repro.configs.base import SwarmConfig
+from repro.fleet import SweepSpec
+from repro.trace import decode_state, state_indices
+
+
+def run(n=30, runs=DEFAULT_RUNS, strategies=(0, 1, 2, 3, 4),
+        sim_time=None, every=None, nodes=None):
+    """State-traced strategy sweep → φ-convergence CSV + queue heatmap CSV.
+
+    ``every``/``nodes`` default from the ``REPRO_FLEET_TRACE_STATE[_NODES]``
+    env knobs (run.py ``--trace-state``), falling back to stride 1 /
+    all nodes so the exporter works standalone.
+    """
+    if every is None:
+        every = int(os.environ.get("REPRO_FLEET_TRACE_STATE", "0")) or 1
+    if nodes is None:
+        nodes = int(os.environ.get("REPRO_FLEET_TRACE_STATE_NODES", "0"))
+    cfg = dataclasses.replace(
+        SwarmConfig(), num_workers=n, trace_state_every=every,
+        trace_state_nodes=nodes,
+        **({"sim_time_s": sim_time} if sim_time else {}))
+    spec = SweepSpec.build("fig_state", cfg, strategies=tuple(strategies),
+                           num_runs=runs)
+    res = fleet_sweep(spec)
+    if not res:
+        return []    # non-zero rank of a multi-host dispatch: worker only
+
+    labels, curves, heat_rows, epochs = [], [], [], None
+    for pt in spec.expand():
+        m = res[pt.label]
+        sdec = decode_state(m["trace_state"], m.get("trace_state_sys"),
+                            m.get("trace_state_epochs"))
+        idx = state_indices(sdec)
+        label = pt.label.split("strategy=")[-1]
+        labels.append(label)
+        curves.append(idx["phi_residual_curve"])
+        if epochs is None:
+            epochs = idx["state_epochs"]
+        heat = idx["queue_depth_heatmap"]
+        for e, row in zip(idx["queue_depth_heatmap_epochs"], heat):
+            heat_rows += [[label, int(e), node, d]
+                          for node, d in enumerate(row)]
+        eps = idx["phi_epochs_to_eps"]
+        print(f"fig_state: {pt.label} samples={idx['state_sample_count']} "
+              f"phi_eps_epoch={eps if eps is not None else 'n/a'} "
+              f"jain_final={idx['queue_jain_final']}")
+
+    rows = [[int(e)] + [c[i] for c in curves]
+            for i, e in enumerate(epochs)]
+    write_csv(os.path.join(ART, "fig_state_phi.csv"),
+              "epoch," + ",".join(labels), rows)
+    write_csv(os.path.join(ART, "fig_state_queue_heatmap.csv"),
+              "strategy,epoch,node,depth", heat_rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

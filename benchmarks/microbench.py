@@ -213,6 +213,59 @@ def run_phi_sparse_wallclock(ns=(1024, 4096, 16384, 65536), k=16,
     return rows
 
 
+def run_trace_overhead(ns=(1024, 4096), sim_time_s=4.0, queue_slots=8,
+                       iters=2,
+                       out_json=os.path.join(ART, "BENCH_fleet.json")):
+    """Per-epoch cost of each telemetry stream on the full simulator.
+
+    Times one ``run_sim`` call per variant — tracing off, the task stream,
+    task + hop streams, and the flight recorder at stride 1 and 16 — at
+    swarm sizes ``ns``, and records ``{n, variant, n_epochs, backend,
+    us_per_call, us_per_epoch}`` rows under
+    ``microbench_trace_overhead`` in ``BENCH_fleet.json``.  The deltas
+    between variants are the streams' marginal cost (the ``off`` row is
+    the baseline the zero-cost-when-off claim is judged against).
+    Rank-0 guarded like the other BENCH producers.
+    """
+    import dataclasses
+
+    from repro.configs.base import SwarmConfig
+    from repro.fleet import worker_env, write_bench_json
+    from repro.swarm import run_sim
+
+    if worker_env().rank != 0:
+        return []
+    backend = jax.default_backend()
+    key = jax.random.PRNGKey(0)
+    variants = (
+        ("off", {}),
+        ("tasks", {"trace_capacity": 4096}),
+        ("tasks+hops", {"trace_capacity": 4096,
+                        "trace_hop_capacity": 4096}),
+        ("state_s1", {"trace_state_every": 1}),
+        ("state_s16", {"trace_state_every": 16}),
+    )
+    rows = []
+    for n in ns:
+        for name, over in variants:
+            cfg = dataclasses.replace(SwarmConfig(),
+                                      sim_time_s=float(sim_time_s),
+                                      queue_slots=int(queue_slots), **over)
+            n_epochs = int(round(cfg.sim_time_s / cfg.decision_period_s))
+            fn = jax.jit(lambda k, cfg=cfg, n=n:
+                         run_sim(k, cfg, jnp.int32(0), n))
+            us = bench(fn, key, iters=iters)
+            rows.append({"n": int(n), "variant": name,
+                         "n_epochs": n_epochs, "backend": backend,
+                         "us_per_call": round(us, 1),
+                         "us_per_epoch": round(us / n_epochs, 1)})
+            print(f"trace_overhead_n{n},{us:.1f},{name}")
+    write_bench_json(out_json, "microbench_trace_overhead", rows)
+    print(f"wrote {out_json} (microbench_trace_overhead, {len(rows)} rows, "
+          f"backend={backend})")
+    return rows
+
+
 def run_phi_sweep(ns=(256, 1024, 4096), runs_axis=1, iters=2,
                   out_json=os.path.join(ART, "BENCH_fleet.json"),
                   wallclock_ns=(1024, 4096)):
@@ -257,5 +310,7 @@ if __name__ == "__main__":
     if fast:
         run_phi_sparse_wallclock(ns=(256,), k=8, dense_ns=(256,),
                                  interpret_ns=(128,))
+        run_trace_overhead(ns=(256,), sim_time_s=1.0, iters=1)
     else:
         run_phi_sparse_wallclock()
+        run_trace_overhead()

@@ -1,0 +1,108 @@
+"""CI perf-regression gate over the ``profile`` section of BENCH_fleet.json.
+
+Every ``fleet_sweep`` records per-point compile/execute wall-clock spans
+into ``BENCH_fleet.json["profile"]`` (``benchmarks/common.py``); this
+script compares a freshly produced file against a committed baseline and
+fails (exit 1) when any point's *execute* span regressed by more than
+``--max-ratio``.  Compile spans are reported but never gated — XLA's
+compile time is too build-dependent to pin.
+
+Comparisons are deliberately conservative to survive noisy CI hosts:
+
+  * points missing from either file, cache hits (``cached: true`` — a hit
+    cost no execute time), and points without an ``execute_s`` span are
+    skipped, not failed;
+  * baselines below ``--min-seconds`` are skipped — ratios over
+    millisecond-scale spans are dominated by scheduler jitter;
+  * a missing/empty baseline profile passes with a note, so the gate can
+    land before the first baseline is committed.
+
+Usage::
+
+    python benchmarks/perf_gate.py \
+        --baseline /tmp/bench_baseline.json \
+        --current benchmarks/artifacts/BENCH_fleet.json \
+        --max-ratio 2.0
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def load_profile(path: str) -> dict:
+    if not os.path.exists(path):
+        return {}
+    with open(path) as f:
+        return json.load(f).get("profile", {})
+
+
+def compare(baseline: dict, current: dict, max_ratio: float,
+            min_seconds: float):
+    """(checked, skipped, failures) over matching sweep/point entries."""
+    checked, skipped, failures = [], [], []
+    for sweep, base_pts in baseline.items():
+        cur_pts = current.get(sweep, {})
+        for label, b in base_pts.items():
+            c = cur_pts.get(label)
+            name = f"{sweep}/{label}"
+            if c is None:
+                skipped.append((name, "missing from current"))
+                continue
+            be, ce = b.get("execute_s"), c.get("execute_s")
+            if b.get("cached") or c.get("cached") or be is None \
+                    or ce is None:
+                skipped.append((name, "cached or no execute span"))
+                continue
+            if be < min_seconds:
+                skipped.append((name, f"baseline {be:.3f}s < "
+                                f"{min_seconds}s floor"))
+                continue
+            ratio = ce / be
+            checked.append((name, be, ce, ratio))
+            if ratio > max_ratio:
+                failures.append((name, be, ce, ratio))
+    return checked, skipped, failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", required=True,
+                    help="BENCH_fleet.json with the committed profile")
+    ap.add_argument("--current", required=True,
+                    help="freshly produced BENCH_fleet.json")
+    ap.add_argument("--max-ratio", type=float, default=2.0,
+                    help="fail when execute_s regresses past this "
+                         "multiple of the baseline (default 2.0)")
+    ap.add_argument("--min-seconds", type=float, default=0.2,
+                    help="skip baselines shorter than this (default 0.2s "
+                         "— sub-200ms ratios are scheduler noise)")
+    args = ap.parse_args(argv)
+
+    baseline = load_profile(args.baseline)
+    current = load_profile(args.current)
+    if not baseline:
+        print(f"perf_gate: no profile section in {args.baseline} — "
+              "nothing to gate (pass)")
+        return 0
+    checked, skipped, failures = compare(baseline, current,
+                                         args.max_ratio, args.min_seconds)
+    for name, be, ce, ratio in checked:
+        print(f"perf_gate: {name} execute {be:.3f}s -> {ce:.3f}s "
+              f"(x{ratio:.2f})")
+    for name, why in skipped:
+        print(f"perf_gate: skip {name}: {why}")
+    if failures:
+        for name, be, ce, ratio in failures:
+            print(f"perf_gate: FAIL {name} execute {be:.3f}s -> {ce:.3f}s "
+                  f"(x{ratio:.2f} > x{args.max_ratio})", file=sys.stderr)
+        return 1
+    print(f"perf_gate: ok ({len(checked)} checked, {len(skipped)} skipped, "
+          f"max ratio x{args.max_ratio})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -24,9 +24,19 @@ Flags:
   --neighbor-k K  run every fleet sweep on the sparse neighbor-list path
                 (``SwarmConfig.neighbor_mode="sparse"``, ``neighbor_k=K``):
                 the O(N·k) φ epoch update instead of the dense [N, N] one
+  --trace-state [E]  flight recorder: run every fleet sweep with the
+                per-epoch swarm-state stream on
+                (``SwarmConfig.trace_state_every = E``, default stride 1):
+                BENCH sections gain φ-convergence, queue-heatmap and
+                energy-drain indices, and a state-driven figure pass
+                (``fig_state``) emits the φ-convergence + queue-heatmap
+                CSVs; while sweeps run, workers append per-point system
+                gauges to progress.jsonl (``--watch`` renders swarm health)
   --watch [p]   don't run benchmarks: follow a progress.jsonl (default
                 ``artifacts/progress.jsonl``) and render completed/total,
-                points/min and ETA for the sweep currently running —
+                points/min, ETA and — when the flight recorder is on —
+                the live swarm gauges (mean/max queue depth, φ spread,
+                completion rate) for the sweep currently running —
                 locally or on any host sharing the progress file.
 """
 from __future__ import annotations
@@ -79,6 +89,12 @@ def run_benchmarks() -> None:
                 ns=(256,), k=8, dense_ns=(256,), interpret_ns=(128,))
         else:
             microbench.run_phi_sparse_wallclock()
+        print("\n== trace-stream overhead (off / tasks / +hops / +state) ==")
+        if FAST:
+            microbench.run_trace_overhead(ns=(256,), sim_time_s=1.0,
+                                          iters=1)
+        else:
+            microbench.run_trace_overhead()
 
     kw = {"runs": 2} if FAST else {}
 
@@ -107,6 +123,13 @@ def run_benchmarks() -> None:
         print("\n== Trace-driven figures: Fig. 4a per-task CDF overlay ==")
         from benchmarks import fig_trace
         fig_trace.run(n=10 if FAST else 30,
+                      strategies=(0, 4) if FAST else (0, 1, 2, 3, 4),
+                      sim_time=5.0 if FAST else None, **kw)
+
+    if int(os.environ.get("REPRO_FLEET_TRACE_STATE", "0")) > 0:
+        print("\n== State-driven figures: φ-convergence + queue heatmap ==")
+        from benchmarks import fig_state
+        fig_state.run(n=10 if FAST else 30,
                       strategies=(0, 4) if FAST else (0, 1, 2, 3, 4),
                       sim_time=5.0 if FAST else None, **kw)
 
@@ -141,6 +164,12 @@ def main(argv=None) -> None:
                     help="run every fleet sweep on the sparse neighbor-list "
                          "path (SwarmConfig.neighbor_mode='sparse', "
                          "neighbor_k=K) — the O(N·k) φ epoch update")
+    ap.add_argument("--trace-state", nargs="?", const=1, default=None,
+                    type=int, metavar="EVERY",
+                    help="flight recorder: SwarmConfig.trace_state_every="
+                         "EVERY (default stride 1) — BENCH sections gain "
+                         "φ-convergence / queue-heatmap / energy-drain "
+                         "indices and fig_state emits the state CSVs")
     ap.add_argument("--watch", nargs="?", const=PROGRESS_JSONL, default=None,
                     metavar="PROGRESS_JSONL",
                     help="follow a progress file instead of running "
@@ -160,6 +189,8 @@ def main(argv=None) -> None:
         os.environ["REPRO_FLEET_TRACE_HOPS"] = str(args.trace_hops)
     if args.neighbor_k is not None:
         os.environ["REPRO_FLEET_NEIGHBOR_K"] = str(args.neighbor_k)
+    if args.trace_state is not None:
+        os.environ["REPRO_FLEET_TRACE_STATE"] = str(args.trace_state)
     run_benchmarks()
 
 

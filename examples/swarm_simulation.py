@@ -25,6 +25,10 @@ transfer decomposition, and writes a Chrome-trace/Perfetto timeline with
 one slice + flow arrow per *hop* (queue-wait tails on the visited nodes'
 tracks) — load it at https://ui.perfetto.dev or chrome://tracing.
 ``--trace-hops 0`` drops back to task records only (net src→dst arrows).
+``--trace-state EVERY`` additionally turns on the per-epoch flight
+recorder for that run: prints the φ-convergence summary and adds Perfetto
+*counter tracks* (per-UAV φ / queue depth / energy, swarm-level
+aggregates) to the same timeline file.
 """
 import argparse
 import dataclasses
@@ -84,6 +88,11 @@ def main():
                     help="HopRecord slots for --trace (one record per "
                          "delivered transfer; 0 disables the hop stream "
                          "and falls back to net src->dst arrows)")
+    ap.add_argument("--trace-state", type=int, default=0, metavar="EVERY",
+                    help="flight recorder for --trace: sample the swarm "
+                         "state every EVERY epochs (0 disables) — prints "
+                         "the φ-convergence summary and adds Perfetto "
+                         "counter tracks to the timeline")
     args = ap.parse_args()
 
     key = jax.random.PRNGKey(0)
@@ -101,11 +110,13 @@ def main():
     cfg_ee = dataclasses.replace(cfg, early_exit_enabled=True)
 
     if args.trace:
-        from repro.trace import (decode, decode_hops, hop_indices,
-                                 trace_indices, write_chrome_trace)
+        from repro.trace import (decode, decode_hops, decode_state,
+                                 hop_indices, state_indices, trace_indices,
+                                 write_chrome_trace)
         cfg_tr = dataclasses.replace(cfg,
                                      trace_capacity=args.trace_capacity,
-                                     trace_hop_capacity=args.trace_hops)
+                                     trace_hop_capacity=args.trace_hops,
+                                     trace_state_every=args.trace_state)
         m = run_batch(key, cfg_tr, jnp.int32(4), args.workers, 1)
         dec = decode(np.asarray(m["trace_records"]),
                      np.asarray(m["trace_overflow"]))
@@ -134,8 +145,21 @@ def main():
                 qw = hix["hop_queue_wait_s_quantiles"]
                 print(f"  hop time p50={ht['p50']:.3f}s p95={ht['p95']:.3f}s"
                       f"  queue-wait p95={qw['p95']:.3f}s")
-        print(f"wrote "
-              f"{write_chrome_trace(args.trace, dec, hdec, cfg_tr.tick_s)} "
+        sdec = None
+        if args.trace_state > 0:
+            sdec = decode_state(np.asarray(m["trace_state"]),
+                                np.asarray(m["trace_state_sys"]),
+                                np.asarray(m["trace_state_epochs"]))
+            six = state_indices(sdec)
+            eps = six["phi_epochs_to_eps"]
+            print(f"  flight recorder: {six['state_sample_count']} samples "
+                  f"(every {args.trace_state}), "
+                  f"phi->5% at epoch {eps if eps is not None else 'n/a'}, "
+                  f"queue jain final={six['queue_jain_final']}, "
+                  f"energy={six['energy_drain_j_curve'][-1]:.1f} J")
+        path = write_chrome_trace(args.trace, dec, hdec, cfg_tr.tick_s,
+                                  state=sdec)
+        print(f"wrote {path} "
               "(open in chrome://tracing or ui.perfetto.dev)")
 
     if args.procs > 1:

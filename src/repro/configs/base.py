@@ -371,3 +371,17 @@ class SwarmConfig:
     # trace_capacity (either stream can be on alone); 0 (default) is fully
     # off with the same zero-cost guarantee.
     trace_hop_capacity: int = 0
+    # > 0 enables the third in-scan stream, the swarm-state "flight
+    # recorder" (DESIGN.md §12): every trace_state_every-th epoch captures
+    # per-node gauges (phi / queue depth / cumulative energy / alive /
+    # in-flight bits) plus system aggregates into epoch-indexed buffers of
+    # ceil(n_epochs / every) slots.  Memory is O(E/stride · min(N, nodes));
+    # 0 (default) is fully off with the same zero-cost guarantee as the
+    # task/hop streams.
+    trace_state_every: int = 0
+    # optional node subsample for the state stream: record gauges only for
+    # the first min(N, trace_state_nodes) nodes (deterministic prefix —
+    # node identity is arbitrary under i.i.d. placement, so a prefix is an
+    # unbiased panel).  System aggregates always span all N nodes.
+    # 0 records every node.
+    trace_state_nodes: int = 0

@@ -31,7 +31,14 @@ Progress surface: every completed point appends one JSON line to a shared
 ``progress.jsonl`` (O_APPEND single-write, safe across processes); the
 ``sweep_start`` row carries the point total, so ``benchmarks/run.py
 --watch`` can render completed/total, points/min and ETA while a sweep is
-running anywhere on the fleet.
+running anywhere on the fleet.  Points computed under the state stream
+(``trace_state_every > 0``) additionally append live swarm-health rows —
+``event: "gauges"`` per completed point and ``event: "chunk"`` per
+completed streaming chunk, both carrying the flight recorder's final
+system gauges (mean/max queue depth, φ spread, completion rate) — and
+computed point rows carry the executor's ``compile_s`` / ``execute_s``
+spans, which ``benchmarks/common.fleet_sweep`` folds into the BENCH
+``profile`` section.
 
 Env contract (remote mode — set per host, then run
 ``python -m repro.fleet.dispatch`` on each)::
@@ -180,8 +187,17 @@ def progress_summary(rows: List[Dict]) -> Optional[Dict]:
     elapsed = (max(ts) - start["t"]) if ts and "t" in start else 0.0
     rate = completed / (elapsed / 60.0) if elapsed > 0 else 0.0
     eta = (total - completed) / (rate / 60.0) if rate > 0 else None
+    gauges = None
+    for r in rows[start_idx + 1:]:
+        # live swarm health: the latest gauges/chunk row of this sweep
+        # (present only when points run with the state stream on)
+        if "queue_depth_mean" in r:
+            gauges = {k: r[k] for k in
+                      ("queue_depth_mean", "queue_depth_max", "phi_spread",
+                       "completion_rate", "sim_t") if k in r}
     return {"sweep": start.get("sweep", "?"), "completed": completed,
-            "total": total, "points_per_min": rate, "eta_s": eta}
+            "total": total, "points_per_min": rate, "eta_s": eta,
+            "gauges": gauges}
 
 
 def render_progress(summary: Optional[Dict]) -> str:
@@ -189,9 +205,16 @@ def render_progress(summary: Optional[Dict]) -> str:
         return "no sweep in progress file yet"
     eta = ("--" if summary["eta_s"] is None
            else f"{summary['eta_s']:.0f}s")
-    return (f"[{summary['sweep']}] {summary['completed']}/{summary['total']} "
+    line = (f"[{summary['sweep']}] {summary['completed']}/{summary['total']} "
             f"points · {summary['points_per_min']:.1f} points/min · "
             f"ETA {eta}")
+    g = summary.get("gauges")
+    if g:
+        line += (f" · q̄ {g.get('queue_depth_mean', 0):.1f}"
+                 f"/max {g.get('queue_depth_max', 0):.0f}"
+                 f" · φΔ {g.get('phi_spread', 0):.2f}"
+                 f" · done {100.0 * g.get('completion_rate', 0):.0f}%")
+    return line
 
 
 # ---------------------------------------------------------------------------
@@ -238,14 +261,18 @@ def run_worker(spec: SweepSpec, store: ResultStore, *, rank: int = 0,
     computed = 0
     emitted = set()    # digests this worker has written a progress row for
 
-    def emit(i, wall, cached):
+    def emit(i, wall, cached, spans=None):
         emitted.add(digests[i])
         if progress is not None:
-            progress.emit(event="point", label=points[i].label,
-                          digest=digests[i], worker=me,
-                          num_runs=points[i].num_runs,
-                          wall_s=round(wall, 3), cached=cached,
-                          t=time.time())
+            row = {"event": "point", "label": points[i].label,
+                   "digest": digests[i], "worker": me,
+                   "num_runs": points[i].num_runs,
+                   "wall_s": round(wall, 3), "cached": cached,
+                   "t": time.time()}
+            if spans and spans.get("_compile_s") is not None:
+                row["compile_s"] = round(spans["_compile_s"], 3)
+                row["execute_s"] = round(spans["_execute_s"], 3)
+            progress.emit(**row)
 
     while True:
         progressed = False
@@ -274,8 +301,10 @@ def run_worker(spec: SweepSpec, store: ResultStore, *, rank: int = 0,
                 if store.has(dig):
                     continue     # completed between has() and claim
                 t0 = time.perf_counter()
+                spans: Dict[str, float] = {}
                 run_point(points[i], backend=backend, store=store,
-                          chunk_size=chunk_size)
+                          chunk_size=chunk_size, progress=progress,
+                          spans=spans)
                 wall = time.perf_counter() - t0
             finally:
                 stop.set()
@@ -283,7 +312,7 @@ def run_worker(spec: SweepSpec, store: ResultStore, *, rank: int = 0,
                 store.release_lease(dig, owner=me)
             computed += 1
             progressed = True
-            emit(i, wall, cached=False)
+            emit(i, wall, cached=False, spans=spans)
         if all(store.has(d) for d in digests):
             return computed
         if not progressed:

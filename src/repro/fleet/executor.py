@@ -36,7 +36,19 @@ which vmap/shard_map batch over the run axis and the streaming loop
 concatenates per chunk — so record buffers are bit-identical across
 backends and survive the same chunk-level checkpoint resume as the
 scalar metrics (tested in ``tests/test_trace.py`` /
-``tests/test_hops.py``).
+``tests/test_hops.py``).  The state stream (``trace_state_every > 0``,
+DESIGN.md §12) is three more such leaves, nothing backend-specific.
+
+Self-profiling (DESIGN.md §12.3): every backend builds its executable
+ahead-of-time (``jax.jit(fn).lower(...).compile()`` — same jaxpr and HLO
+as dispatching through ``jit``, so numerics are bit-identical; pinned by
+``tests/test_state_trace.py``), which splits the first-call wall clock
+into an honest *compile* span and an *execute* span.  ``run_point``
+surfaces them as ``_compile_s`` / ``_execute_s`` pseudo-metrics (leading
+underscore: skipped by reports, never stored) and they land in the
+``profile`` section of BENCH_fleet.json via ``benchmarks/common.py``.
+Executables are cached per (cfg, n, run-shape) — cache hits repeat the
+original compile span, which is the cost a cold worker would pay.
 """
 from __future__ import annotations
 
@@ -73,58 +85,116 @@ def _pad_keys(keys: jax.Array, to: int) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
-# backends (each: key -> dict of [num_runs] metric arrays)
+# backends (each: key -> dict of [num_runs] metric arrays), built AOT so
+# compile time and execute time are separable spans
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "n", "num_runs"))
-def _vmap_call(key, cfg: SwarmConfig, strategy, n: int, num_runs: int):
-    keys = jax.random.split(key, num_runs)
-    return jax.vmap(lambda k: run_sim(k, cfg, strategy, n))(keys)
+def _key_struct() -> jax.ShapeDtypeStruct:
+    k = jax.random.PRNGKey(0)
+    return jax.ShapeDtypeStruct(k.shape, k.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "n", "mesh"))
-def _sharded_call(keys, cfg: SwarmConfig, strategy, n: int, mesh):
+_I32 = jax.ShapeDtypeStruct((), jnp.int32)
+
+
+@functools.lru_cache(maxsize=None)
+def _profiled_vmap(cfg: SwarmConfig, n: int, num_runs: int):
+    """AOT executable for the vmap backend + its compile-span seconds."""
+    def fn(key, strategy):
+        keys = jax.random.split(key, num_runs)
+        return jax.vmap(lambda k: run_sim(k, cfg, strategy, n))(keys)
+    t0 = time.perf_counter()
+    compiled = jax.jit(fn).lower(_key_struct(), _I32).compile()
+    return compiled, time.perf_counter() - t0
+
+
+@functools.lru_cache(maxsize=None)
+def _profiled_sharded(cfg: SwarmConfig, n: int, padded: int, mesh):
+    """AOT executable for the sharded backend (padded key batch in)."""
     from jax.sharding import PartitionSpec as P
-    return shard_map(
-        lambda ks: jax.vmap(lambda k: run_sim(k, cfg, strategy, n))(ks),
-        mesh=mesh, in_specs=P("mc"), out_specs=P("mc"))(keys)
+
+    def fn(keys, strategy):
+        return shard_map(
+            lambda ks: jax.vmap(lambda k: run_sim(k, cfg, strategy, n))(ks),
+            mesh=mesh, in_specs=P("mc"), out_specs=P("mc"))(keys)
+    ks = _key_struct()
+    keys_struct = jax.ShapeDtypeStruct((padded,) + ks.shape, ks.dtype)
+    t0 = time.perf_counter()
+    compiled = jax.jit(fn).lower(keys_struct, _I32).compile()
+    return compiled, time.perf_counter() - t0
 
 
-@functools.lru_cache(maxsize=2)
-def _stream_chunk_fn(donate: bool):
-    def chunk(keys, cfg: SwarmConfig, strategy, n: int):
+@functools.lru_cache(maxsize=None)
+def _profiled_stream(cfg: SwarmConfig, n: int, chunk: int, donate: bool):
+    """AOT executable for one streaming chunk (lax.map, serial runs).
+
+    ``donate`` releases the chunk key buffer where the runtime honors it
+    (TPU/GPU — the memory-bounded regime streaming exists for); CPU XLA
+    declines donation and would warn on every compile.
+    """
+    def fn(keys, strategy):
         return jax.lax.map(lambda k: run_sim(k, cfg, strategy, n), keys)
-    return jax.jit(chunk, static_argnames=("cfg", "n"),
-                   donate_argnums=(0,) if donate else ())
+    ks = _key_struct()
+    keys_struct = jax.ShapeDtypeStruct((chunk,) + ks.shape, ks.dtype)
+    t0 = time.perf_counter()
+    compiled = jax.jit(fn, donate_argnums=(0,) if donate else ()).lower(
+        keys_struct, _I32).compile()
+    return compiled, time.perf_counter() - t0
 
 
-def _stream_chunk(keys, cfg: SwarmConfig, strategy, n: int):
-    # donate the chunk key buffer where the runtime honors it (TPU/GPU —
-    # the memory-bounded regime streaming exists for); CPU XLA declines
-    # donation and would warn on every compile
-    return _stream_chunk_fn(jax.default_backend() != "cpu")(
-        keys, cfg, strategy, n)
+def _block(out):
+    return jax.block_until_ready(out)
 
 
-def _run_sharded(key, cfg: SwarmConfig, strategy, n: int, num_runs: int):
+def _run_sharded(key, cfg: SwarmConfig, strategy, n: int, num_runs: int,
+                 spans: Optional[Dict] = None):
     from jax.sharding import Mesh
     devs = np.asarray(jax.devices())
     mesh = Mesh(devs, ("mc",))
     padded = (num_runs + len(devs) - 1) // len(devs) * len(devs)
     keys = _pad_keys(jax.random.split(key, num_runs), padded)
-    out = _sharded_call(keys, cfg, strategy, n, mesh)
+    compiled, compile_s = _profiled_sharded(cfg, n, padded, mesh)
+    t0 = time.perf_counter()
+    out = _block(compiled(keys, jnp.asarray(strategy, jnp.int32)))
+    if spans is not None:
+        spans["_compile_s"] = compile_s
+        spans["_execute_s"] = time.perf_counter() - t0
     return jax.tree.map(lambda x: x[:num_runs], out)
+
+
+def _sys_gauges(sys_buf) -> Dict[str, float]:
+    """Final-sample system gauges of a ``trace_state_sys`` buffer, run-mean,
+    rounded — the live swarm-health row for progress.jsonl."""
+    from repro.trace import schema
+    s = np.asarray(sys_buf, np.float64)
+    if s.ndim == 2:
+        s = s[None]
+    g = dict(zip(schema.SYS_GAUGES, s[:, -1, :].mean(axis=0)))
+    return {"queue_depth_mean": round(g["queue_depth_mean"], 3),
+            "queue_depth_max": round(g["queue_depth_max"], 3),
+            "phi_spread": round(g["phi_max"] - g["phi_min"], 3),
+            "completion_rate": round(g["completed"]
+                                     / max(g["generated"], 1.0), 4),
+            "sim_t": round(g["t"], 3)}
 
 
 def _run_streaming(key, cfg: SwarmConfig, strategy, n: int, num_runs: int,
                    chunk_size: int, store: Optional[ResultStore] = None,
                    digest: Optional[str] = None,
-                   max_chunks: Optional[int] = None
+                   max_chunks: Optional[int] = None,
+                   spans: Optional[Dict] = None,
+                   progress=None, label: Optional[str] = None
                    ) -> Dict[str, np.ndarray]:
     chunk = max(1, min(chunk_size, num_runs))
     n_chunks = (num_runs + chunk - 1) // chunk
     keys = jax.random.split(key, num_runs)
+    strategy = jnp.asarray(strategy, jnp.int32)
+    compiled, compile_s = _profiled_stream(
+        cfg, n, chunk, jax.default_backend() != "cpu")
+    if spans is not None:
+        spans["_compile_s"] = compile_s
+        spans.setdefault("_execute_s", 0.0)
 
     done, accum = 0, None
     if store is not None and digest is not None:
@@ -136,14 +206,25 @@ def _run_streaming(key, cfg: SwarmConfig, strategy, n: int, num_runs: int,
             raise SweepInterrupted(
                 f"stopped after {c}/{n_chunks} chunks (max_chunks)")
         ks = _pad_keys(keys[c * chunk:(c + 1) * chunk], chunk)
-        out = _stream_chunk(ks, cfg, strategy, n)
+        t0 = time.perf_counter()
+        out = compiled(ks, strategy)
         out = {k: np.asarray(v) for k, v in out.items()}
+        if spans is not None:
+            spans["_execute_s"] += time.perf_counter() - t0
         if accum is None:
             accum = out
         else:
             accum = {k: np.concatenate([accum[k], out[k]]) for k in accum}
         if store is not None and digest is not None:
             store.save_partial(digest, c + 1, accum, chunk)
+        if progress is not None:
+            # live swarm health per completed chunk: the flight recorder's
+            # final system gauges, when the state stream is on
+            row = {"event": "chunk", "label": label, "chunk": c + 1,
+                   "chunks": n_chunks, "t": time.time()}
+            if "trace_state_sys" in out:
+                row.update(_sys_gauges(out["trace_state_sys"]))
+            progress.emit(**row)
 
     return {k: v[:num_runs] for k, v in accum.items()}
 
@@ -154,28 +235,49 @@ def _run_streaming(key, cfg: SwarmConfig, strategy, n: int, num_runs: int,
 
 
 def run_batch(key, cfg: SwarmConfig, strategy, n: int, num_runs: int, *,
-              backend: str = "vmap", chunk_size: int = DEFAULT_CHUNK):
+              backend: str = "vmap", chunk_size: int = DEFAULT_CHUNK,
+              spans: Optional[Dict] = None):
     """Run ``num_runs`` Monte-Carlo simulations of ``(cfg, strategy, n)``.
 
     Returns a dict of ``[num_runs]`` metric arrays (see ``summarize``),
     bit-identical across backends.  ``swarm.run_many`` is a thin wrapper
-    over the ``vmap`` backend of this function.
+    over the ``vmap`` backend of this function.  Passing a ``spans`` dict
+    fills ``"_compile_s"`` / ``"_execute_s"`` wall-clock spans (the
+    execute span blocks on the result).
     """
     if backend == "vmap":
-        return _vmap_call(key, cfg, strategy, n, num_runs)
+        compiled, compile_s = _profiled_vmap(cfg, n, num_runs)
+        t0 = time.perf_counter()
+        out = compiled(key, jnp.asarray(strategy, jnp.int32))
+        if spans is not None:
+            _block(out)
+            spans["_compile_s"] = compile_s
+            spans["_execute_s"] = time.perf_counter() - t0
+        return out
     if backend == "sharded":
-        return _run_sharded(key, cfg, strategy, n, num_runs)
+        return _run_sharded(key, cfg, strategy, n, num_runs, spans=spans)
     if backend == "streaming":
         return {k: jnp.asarray(v) for k, v in _run_streaming(
-            key, cfg, strategy, n, num_runs, chunk_size).items()}
+            key, cfg, strategy, n, num_runs, chunk_size,
+            spans=spans).items()}
     raise ValueError(f"unknown backend {backend!r}; one of {BACKENDS}")
 
 
 def run_point(point: SweepPoint, *, backend: str = "vmap",
               store: Optional[ResultStore] = None,
               chunk_size: int = DEFAULT_CHUNK,
-              max_chunks: Optional[int] = None) -> Dict[str, np.ndarray]:
-    """Execute one sweep point, consulting/filling ``store`` if given."""
+              max_chunks: Optional[int] = None,
+              progress=None,
+              spans: Optional[Dict] = None) -> Dict[str, np.ndarray]:
+    """Execute one sweep point, consulting/filling ``store`` if given.
+
+    A caller-supplied ``spans`` dict receives ``"_compile_s"`` /
+    ``"_execute_s"`` wall-clock spans when the point is actually computed
+    (a store hit fills nothing — it cost neither), keeping the returned
+    metrics identical between computed and cached paths.  ``progress``
+    additionally receives per-chunk rows (streaming) and a per-point
+    ``gauges`` row when the state stream is on.
+    """
     if backend not in BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; one of {BACKENDS}")
     digest = point_digest(point) if store is not None else None
@@ -188,15 +290,19 @@ def run_point(point: SweepPoint, *, backend: str = "vmap",
         metrics = _run_streaming(key, point.cfg, jnp.int32(point.strategy),
                                  point.n, point.num_runs, chunk_size,
                                  store=store, digest=digest,
-                                 max_chunks=max_chunks)
+                                 max_chunks=max_chunks, spans=spans,
+                                 progress=progress, label=point.label)
     else:
         out = run_batch(key, point.cfg, jnp.int32(point.strategy), point.n,
-                        point.num_runs, backend=backend)
+                        point.num_runs, backend=backend, spans=spans)
         metrics = {k: np.asarray(v) for k, v in out.items()}
     if store is not None:
         store.put(digest, metrics, meta={
             "label": point.label, "backend": backend,
             "code_version": code_version()})
+    if progress is not None and "trace_state_sys" in metrics:
+        progress.emit(event="gauges", label=point.label, t=time.time(),
+                      **_sys_gauges(metrics["trace_state_sys"]))
     return metrics
 
 
@@ -221,17 +327,30 @@ def execute(spec: SweepSpec, *, backend: str = "vmap",
     out = {}
     for pt in points:
         t0 = time.perf_counter()
+        spans: Dict[str, float] = {}
         m = dict(run_point(pt, backend=backend, store=store,
-                           chunk_size=chunk_size))
+                           chunk_size=chunk_size, progress=progress,
+                           spans=spans))
         m["_wall_s"] = time.perf_counter() - t0
+        # computed points carry the AOT compile/execute split (a store hit
+        # fills neither); reports skip underscore keys, so these are purely
+        # for the profile section / progress surface
+        m["_compile_s"] = spans.get("_compile_s")
+        m["_execute_s"] = spans.get("_execute_s")
         if verbose:
             print(f"[fleet:{spec.name}] {pt.label} "
                   f"({m['_wall_s']:.2f}s, backend={backend})")
         if progress is not None:
-            progress.emit(event="point", label=pt.label,
-                          digest=point_digest(pt) if store is not None
-                          else None,
-                          worker="local", num_runs=pt.num_runs,
-                          wall_s=round(m["_wall_s"], 3), t=time.time())
+            row = {"event": "point", "label": pt.label,
+                   "digest": point_digest(pt) if store is not None
+                   else None,
+                   "worker": "local", "num_runs": pt.num_runs,
+                   "wall_s": round(m["_wall_s"], 3),
+                   "cached": spans.get("_execute_s") is None,
+                   "t": time.time()}
+            if m["_compile_s"] is not None:
+                row["compile_s"] = round(m["_compile_s"], 3)
+                row["execute_s"] = round(m["_execute_s"], 3)
+            progress.emit(**row)
         out[pt.label] = m
     return out

@@ -77,6 +77,13 @@ def point_indices(metrics: Mapping[str, np.ndarray],
         out.update(hop_indices(decode_hops(
             metrics["trace_hops"], metrics.get("trace_hop_overflow")),
             tick_s=tick_s, tx_power_dbm=tx_power_dbm))
+    if "trace_state" in metrics or "trace_state_sys" in metrics:
+        # the flight recorder (trace_state_every > 0): φ-convergence,
+        # queue-depth heatmap, energy-drain and imbalance indices
+        from repro.trace import decode_state, state_indices
+        out.update(state_indices(decode_state(
+            metrics.get("trace_state"), metrics.get("trace_state_sys"),
+            metrics.get("trace_state_epochs"))))
     if per_task_latency_s is not None and len(per_task_latency_s):
         out["task_latency_cdf_s"] = latency_cdf(per_task_latency_s)
     for k in ("jain_fairness", "energy_per_task_j"):

@@ -98,6 +98,12 @@ def _compact_trace(key: str, v) -> np.ndarray:
     shape structure and every written record survive, so decode/export of
     a cache hit equals the freshly computed buffer.  Both schemas keep
     ``seq`` in column 0 (asserted), so one trim covers both streams.
+
+    The flight-recorder buffers (``trace_state`` / ``trace_state_sys`` /
+    ``trace_state_epochs``) are *epoch*-indexed with exact static size
+    S = ceil(n_epochs / every) — no sentinel slack to trim — so they pass
+    through here untouched (nested ``tolist`` in ``put`` round-trips any
+    rank).
     """
     rec = np.asarray(v, np.float32)
     if (key not in ("trace_records", "trace_hops") or rec.ndim != 3

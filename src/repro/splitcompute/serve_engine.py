@@ -55,6 +55,60 @@ class ServeStats:
         self._completed = 0
         self._latency_sum = 0.0
         self._exit_counts: Dict[int, int] = {0: 0, 1: 0, 2: 0}
+        # flight-recorder stream (sim's trace_state analogue): one system
+        # gauge row + one per-stage gauge row per sampled epoch, on the
+        # shared SYS_GAUGES / STATE_GAUGES vocabulary
+        self._state_rows: List[np.ndarray] = []
+        self._stage_rows: List[np.ndarray] = []
+        self._dropped = 0
+        self._generated = 0
+
+    def record_state(self, *, t, queue_depths, in_flight=None,
+                     completed=None, dropped=None, generated=None,
+                     load=None) -> None:
+        """Append one flight-recorder sample (sim's ``write_state``
+        analogue) on the shared gauge vocabulary.
+
+        ``queue_depths`` is the per-stage depth snapshot; ``load``
+        optionally carries the per-stage congestion metric D (Eqs. 14-15)
+        into the ``phi`` gauge lane — the serve side's diffusive-metric
+        stand-in, so the same decode/aggregate/export pipeline renders
+        both.  Counters default from the incremental record() totals.
+        """
+        q = np.asarray(queue_depths, np.float64)
+        completed = self._completed if completed is None else completed
+        dropped = self._dropped if dropped is None else dropped
+        generated = self._generated if generated is None else generated
+        jain = (q.sum() ** 2) / (len(q) * (q * q).sum() + 1e-12)
+        self._state_rows.append(schema.pack_state_sys_np(
+            t, q.sum() if in_flight is None else in_flight,
+            0.0, completed, dropped, generated,
+            q.mean() if len(q) else 0.0, q.max() if len(q) else 0.0, jain,
+            *( (float(np.mean(load)), float(np.min(load)),
+                float(np.max(load))) if load is not None else (0, 0, 0) )))
+        phi = (np.asarray(load, np.float64) if load is not None
+               else np.zeros_like(q))
+        rows = np.zeros((len(q), schema.NUM_STATE_GAUGES), np.float64)
+        rows[:, schema.ST_PHI] = phi
+        rows[:, schema.ST_QUEUE_DEPTH] = q
+        rows[:, schema.ST_ALIVE] = 1.0
+        self._stage_rows.append(rows)
+
+    @property
+    def state_records(self) -> np.ndarray:
+        """``[samples, NUM_SYS_GAUGES]`` system gauge rows
+        (``trace.decode_state(sys=...)``-able)."""
+        if not self._state_rows:
+            return np.zeros((0, schema.NUM_SYS_GAUGES), np.float64)
+        return np.stack(self._state_rows)
+
+    @property
+    def stage_state(self) -> np.ndarray:
+        """``[samples, n_stages, NUM_STATE_GAUGES]`` per-stage gauge rows
+        (``trace.decode_state(state=...)``-able)."""
+        if not self._stage_rows:
+            return np.zeros((0, 0, schema.NUM_STATE_GAUGES), np.float64)
+        return np.stack(self._stage_rows)
 
     def record(self, *, seq, src, dst, created_t, completed_t, exit_label,
                layers, hops, count=1) -> None:
@@ -170,6 +224,7 @@ class SplitServeEngine:
         h, positions = embed_in(self.params, self.cfg, batch)
         rid = self._next_id
         self._next_id += 1
+        self.stats._generated += 1
         self.queues[0].append({
             "id": rid, "h": h, "positions": positions,
             "t0": self.clock if t_now is None else t_now, "stage": 0})
@@ -232,6 +287,11 @@ class SplitServeEngine:
                 req["h"] = h
                 req["stage"] = nxt
                 self.queues[nxt].append(req)
+        # flight-recorder sample: post-step depths + the congestion metric
+        # D in the phi lane (the serve side's diffusive-metric stand-in)
+        self.stats.record_state(
+            t=t_now, queue_depths=[len(q) for q in self.queues],
+            load=np.asarray(self.cong.D))
         return completed
 
     def drain(self, max_steps=1000, dt: float = 0.05):

@@ -101,6 +101,7 @@ def init_state(key, cfg: SwarmConfig, n: int) -> Dict:
         # number downstream — is exactly the historical one
         **trace_record.init_trace(cfg, n),
         **trace_record.init_hops(cfg, n),
+        **trace_record.init_state_stream(cfg, n),
     }
 
 
@@ -370,6 +371,12 @@ def _epoch(st, key, epoch_idx, strategy, cfg: SwarmConfig,
         return st, None
 
     st, _ = jax.lax.scan(tick_body, st, jnp.arange(n_ticks))
+
+    # 6. flight recorder: snapshot node gauges + system aggregates at the
+    #    end of every trace_state_every-th epoch (DESIGN.md §12)
+    if trace_record.state_enabled(cfg):
+        st = trace_record.write_state(st, epoch_idx,
+                                      t0 + cfg.decision_period_s, cfg)
     return st
 
 
@@ -437,6 +444,12 @@ def summarize(st, cfg: SwarmConfig, profile: TaskProfile) -> Dict:
         # into hop-resolved indices by trace.decode_hops/hop_indices)
         out["trace_hops"] = st["trace_hops"]
         out["trace_hop_overflow"] = st["trace_hop_overflow"]
+    if trace_record.state_enabled(cfg):
+        # the epoch-indexed flight recorder (decode_state/state_indices);
+        # state_e_tx is an internal accumulator, never emitted
+        out["trace_state"] = st["trace_state"]
+        out["trace_state_sys"] = st["trace_state_sys"]
+        out["trace_state_epochs"] = st["trace_state_epochs"]
     return out
 
 

@@ -13,9 +13,18 @@ time and per-link bits with the queue-wait vs in-flight decomposition
 timeline with true per-hop slices and flow arrows
 (:mod:`~repro.trace.export`).
 
-Enabled by ``SwarmConfig.trace_capacity > 0`` (tasks) and
-``SwarmConfig.trace_hop_capacity > 0`` (hops), independently; with the
-default 0 no trace state exists anywhere and the simulator is
+A third stream, the epoch-indexed swarm-state **flight recorder**
+(``SwarmConfig.trace_state_every > 0``; DESIGN.md §12), snapshots
+per-node gauges (φ, queue depth, cumulative energy, alive, in-flight
+bits) plus system aggregates every N-th epoch; ``decode_state`` /
+``state_indices`` turn it into φ-convergence curves, queue-depth
+heatmaps, energy-drain trajectories and imbalance indices, and
+``state_counter_events`` renders Perfetto counter tracks.
+
+Enabled by ``SwarmConfig.trace_capacity > 0`` (tasks),
+``SwarmConfig.trace_hop_capacity > 0`` (hops) and
+``SwarmConfig.trace_state_every > 0`` (state), independently; with the
+defaults 0 no trace state exists anywhere and the simulator is
 bit-identical to an untraced build.
 """
 from repro.trace import schema
@@ -23,18 +32,22 @@ from repro.trace.aggregate import (exit_label_histogram, hop_airtime_s,
                                    hop_energy_j, hop_histogram, hop_indices,
                                    int_histogram, jain_fairness, link_bits,
                                    link_energy_j, quantile_summary,
-                                   trace_indices)
-from repro.trace.decode import decode, decode_hops, split_runs
+                                   state_indices, trace_indices)
+from repro.trace.decode import decode, decode_hops, decode_state, split_runs
 from repro.trace.export import (chrome_trace_events, hop_trace_events,
-                                write_chrome_trace)
-from repro.trace.record import (init_hops, init_trace, traced_push,
-                                write_hop_records, write_records)
+                                state_counter_events, write_chrome_trace)
+from repro.trace.record import (init_hops, init_state_stream, init_trace,
+                                state_enabled, traced_push,
+                                write_hop_records, write_records,
+                                write_state)
 
-__all__ = ["schema", "decode", "decode_hops", "split_runs",
-           "trace_indices", "hop_indices", "link_bits",
+__all__ = ["schema", "decode", "decode_hops", "decode_state", "split_runs",
+           "trace_indices", "hop_indices", "state_indices", "link_bits",
            "hop_airtime_s", "hop_energy_j", "link_energy_j",
            "quantile_summary", "jain_fairness",
            "hop_histogram", "exit_label_histogram", "int_histogram",
-           "chrome_trace_events", "hop_trace_events", "write_chrome_trace",
-           "init_trace", "init_hops", "traced_push",
-           "write_records", "write_hop_records"]
+           "chrome_trace_events", "hop_trace_events",
+           "state_counter_events", "write_chrome_trace",
+           "init_trace", "init_hops", "init_state_stream", "state_enabled",
+           "traced_push", "write_records", "write_hop_records",
+           "write_state"]

@@ -21,6 +21,14 @@ import numpy as np
 
 QS = (0.05, 0.25, 0.5, 0.75, 0.9, 0.95, 0.99)
 
+# φ-convergence threshold: epochs_to_eps is the first sampled epoch where
+# the run-mean relative residual RMS(φ_t − φ_final)/RMS(φ_final) ≤ this
+PHI_EPS = 0.05
+# queue-depth heatmaps are downsampled to at most this many epoch rows
+# before landing in BENCH (indent=1 JSON puts every number on its own
+# line); the kept epochs are reported explicitly, never silently
+HEATMAP_MAX_EPOCHS = 128
+
 
 def quantile_summary(x, qs: Sequence[float] = QS) -> Optional[Dict[str, float]]:
     """``{"p05": ..., "p50": ..., ...}`` of a 1-D sample; ``None`` when the
@@ -78,6 +86,91 @@ def trace_indices(dec: Mapping) -> Dict:
         "tx_time_s_mean": (float(dec["tx_time_s"][done].mean())
                            if lat.size else None),
     }
+
+
+def _round_list(x, nd: int = 6):
+    return [round(float(v), nd) for v in np.asarray(x, np.float64).ravel()]
+
+
+def state_indices(sdec: Mapping) -> Dict:
+    """Decoded state stream → the JSON-ready flight-recorder section.
+
+    Stable key set, like the task/hop builders: node-gauge indices are
+    ``None`` when the decode lacks per-node buffers, system indices are
+    ``None`` when it lacks sys columns (the serve engine emits either
+    subset), and a fully-populated simulated point fills everything —
+    φ-convergence curve + epochs-to-ε, queue-depth heatmap (run mean,
+    ≤ :data:`HEATMAP_MAX_EPOCHS` epoch rows, kept epochs listed
+    explicitly), energy-drain trajectory, and the peak/steady-state
+    Jain imbalance of instantaneous queue depths.
+    """
+    epochs = np.asarray(sdec["epoch"], np.int64)
+    S = int(epochs.size)
+    out: Dict = {
+        "state_sample_count": S,
+        "state_runs": int(sdec.get("num_runs", 1)),
+        "state_epochs": [int(e) for e in epochs],
+        "state_nodes": None,
+        "phi_eps": PHI_EPS,
+        "phi_residual_curve": None,
+        "phi_epochs_to_eps": None,
+        "phi_spread_final": None,
+        "queue_depth_heatmap": None,
+        "queue_depth_heatmap_epochs": None,
+        "queue_depth_mean_curve": None,
+        "queue_depth_max_curve": None,
+        "queue_jain_curve": None,
+        "queue_jain_min": None,
+        "queue_jain_final": None,
+        "energy_drain_j_curve": None,
+        "tasks_in_flight_curve": None,
+        "completion_rate_final": None,
+    }
+    if "phi" in sdec and S:
+        phi = np.asarray(sdec["phi"], np.float64)          # [R, S, M]
+        out["state_nodes"] = int(phi.shape[2])
+        # ‖φ_t − φ_∞‖: RMS over nodes of the residual vs the final sample,
+        # averaged over runs (φ_∞ ≈ the last recorded sample of each run)
+        resid = np.sqrt(np.mean((phi - phi[:, -1:, :]) ** 2, axis=2))
+        curve = resid.mean(axis=0)                         # [S]
+        out["phi_residual_curve"] = _round_list(curve)
+        denom = np.sqrt(np.mean(phi[:, -1:, :] ** 2, axis=2)) + 1e-12
+        rel = (resid / denom).mean(axis=0)
+        hit = np.nonzero(rel <= PHI_EPS)[0]
+        out["phi_epochs_to_eps"] = (int(epochs[hit[0]]) if hit.size
+                                    else None)
+        depth = np.asarray(sdec["queue_depth"], np.float64)  # [R, S, M]
+        heat = depth.mean(axis=0)                            # [S, M]
+        keep = np.unique(np.linspace(0, S - 1,
+                                     min(S, HEATMAP_MAX_EPOCHS)).astype(int))
+        out["queue_depth_heatmap"] = [_round_list(heat[i], 3) for i in keep]
+        out["queue_depth_heatmap_epochs"] = [int(epochs[i]) for i in keep]
+    if "queue_depth_mean" in sdec and S:
+        qmean = np.asarray(sdec["queue_depth_mean"], np.float64)
+        qmax = np.asarray(sdec["queue_depth_max"], np.float64)
+        jain = np.asarray(sdec["queue_jain"], np.float64)
+        out["queue_depth_mean_curve"] = _round_list(qmean.mean(axis=0), 3)
+        out["queue_depth_max_curve"] = _round_list(qmax.mean(axis=0), 3)
+        out["queue_jain_curve"] = _round_list(jain.mean(axis=0))
+        out["queue_jain_min"] = round(float(jain.mean(axis=0).min()), 6)
+        out["queue_jain_final"] = round(float(jain[:, -1].mean()), 6)
+        out["energy_drain_j_curve"] = _round_list(
+            np.asarray(sdec["energy_j"], np.float64).mean(axis=0))
+        out["tasks_in_flight_curve"] = _round_list(
+            np.asarray(sdec["tasks_in_flight"], np.float64).mean(axis=0), 3)
+        done = np.asarray(sdec["completed"], np.float64)[:, -1]
+        gen = np.asarray(sdec["generated"], np.float64)[:, -1]
+        out["completion_rate_final"] = round(
+            float((done / np.maximum(gen, 1.0)).mean()), 6)
+        out["phi_spread_final"] = round(float(
+            (np.asarray(sdec["phi_max"], np.float64)[:, -1]
+             - np.asarray(sdec["phi_min"], np.float64)[:, -1]).mean()), 6)
+    elif "phi" in sdec and S:
+        phi = np.asarray(sdec["phi"], np.float64)
+        out["phi_spread_final"] = round(float(
+            (phi[:, -1, :].max(axis=1) - phi[:, -1, :].min(axis=1)).mean()),
+            6)
+    return out
 
 
 def _link_sums(hdec: Mapping, weights) -> Dict[str, float]:

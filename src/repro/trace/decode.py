@@ -58,6 +58,60 @@ def decode_hops(records, overflow=None) -> Dict[str, np.ndarray]:
     return out
 
 
+def decode_state(state=None, sys=None, epochs=None) -> Dict[str, np.ndarray]:
+    """State-stream buffer(s) → dict of epoch-indexed numpy series.
+
+    Accepts any subset of the three flight-recorder buffers (a simulated
+    point carries all three; the serve engine emits sys-only or
+    state+sys without epochs):
+
+      * ``state``  — ``[S, M, NUM_STATE_GAUGES]`` or ``[R, S, M, G]``
+      * ``sys``    — ``[S, NUM_SYS_GAUGES]`` or ``[R, S, SYS]``
+      * ``epochs`` — ``[S]`` or ``[R, S]`` slot→epoch map (−1 = unwritten;
+        identical across runs, so only row 0 is consulted)
+
+    Returns ``{"epoch": [S'] int64, "num_runs": int}`` plus one
+    ``[R, S', M]`` float64 series per :data:`schema.STATE_GAUGES` name and
+    one ``[R, S']`` series per :data:`schema.SYS_GAUGES` name (the two
+    vocabularies don't collide, so the dict is flat).  Unwritten slots
+    (scan ended before the slot's epoch) are masked out of every series.
+    """
+    out: Dict[str, np.ndarray] = {}
+    S = None
+    if state is not None:
+        st = np.asarray(state, np.float64)
+        if st.ndim == 3:
+            st = st[None]
+        S = st.shape[1]
+    if sys is not None:
+        sy = np.asarray(sys, np.float64)
+        if sy.ndim == 2:
+            sy = sy[None]
+        S = sy.shape[1] if S is None else S
+    if S is None:
+        raise ValueError("decode_state needs at least one buffer")
+    if epochs is not None:
+        ep = np.asarray(epochs, np.float64).reshape(-1, S)[0]
+        valid = ep >= 0.0
+        out["epoch"] = ep[valid].astype(np.int64)
+    else:
+        valid = np.ones((S,), bool)
+        out["epoch"] = np.arange(S, dtype=np.int64)
+    if state is not None:
+        for i, name in enumerate(schema.STATE_GAUGES):
+            # index the gauge axis first: combining the boolean epoch mask
+            # and the gauge index in one subscript would be non-adjacent
+            # advanced indexing, which transposes the result dims to the
+            # front ([S', R, M] instead of [R, S', M])
+            out[name] = st[..., i][:, valid, :]
+        out["num_runs"] = int(st.shape[0])
+    if sys is not None:
+        for i, name in enumerate(schema.SYS_GAUGES):
+            out[name] = sy[:, valid, i]
+        out["num_runs"] = int(sy.shape[0])
+    return out
+
+
 def split_runs(records, overflow=None, hops: bool = False):
     """``[num_runs, C, F]`` stack → list of per-run decoded dicts."""
     rec = np.asarray(records)

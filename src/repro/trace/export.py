@@ -18,6 +18,14 @@ and https://ui.perfetto.dev load directly:
     tail (stall ticks: receiver contention / fault stalls), and one flow
     arrow per hop from departure to delivery.
 
+  * **with the state stream** (``decode_state`` output passed as
+    ``state``): Perfetto **counter tracks** (``"C"`` events) next to the
+    slices — per recorded node a φ lane, a queue-depth lane and a
+    cumulative-energy lane (``e_comp_j``/``e_tx_j`` stack), plus
+    swarm-level counters (queue depth mean/max, tasks
+    in-flight/completed/dropped, φ mean/min/max, total energy, queue
+    Jain) from the system gauges.
+
 Everything is stamped from record fields only — no wall clock — so the
 export is deterministic in the records.
 """
@@ -83,8 +91,63 @@ def hop_trace_events(hops: Mapping, tick_s: Optional[float] = None
     return events
 
 
+def state_counter_events(state: Mapping, run: int = 0) -> List[Dict]:
+    """Decoded state stream → Perfetto counter-track (``"C"``) events.
+
+    One φ / queue-depth / energy counter lane per recorded node (its own
+    pid so the lanes group under a "swarm state" process, clear of the
+    slice tracks) and swarm-level lanes from the system gauges.  ``run``
+    picks the Monte-Carlo run to render (counters are per-run series; the
+    aggregate surfaces live in ``state_indices``, not the timeline).
+    """
+    ts_s = (state["t"][run] if "t" in state
+            else state["epoch"].astype(float))
+    events: List[Dict] = [
+        {"ph": "M", "pid": 1, "name": "process_name",
+         "args": {"name": "swarm state"}}]
+    if "phi" in state:
+        phi = state["phi"][run]                       # [S, M]
+        depth = state["queue_depth"][run]
+        e_comp = state["e_comp_j"][run]
+        e_tx = state["e_tx_j"][run]
+        for m in range(phi.shape[1]):
+            for s in range(phi.shape[0]):
+                ts = float(ts_s[s]) * _US
+                events.append({"ph": "C", "pid": 1, "name": f"uav {m} phi",
+                               "ts": ts,
+                               "args": {"phi": float(phi[s, m])}})
+                events.append({"ph": "C", "pid": 1,
+                               "name": f"uav {m} queue", "ts": ts,
+                               "args": {"depth": float(depth[s, m])}})
+                events.append({"ph": "C", "pid": 1,
+                               "name": f"uav {m} energy_j", "ts": ts,
+                               "args": {"e_comp_j": float(e_comp[s, m]),
+                                        "e_tx_j": float(e_tx[s, m])}})
+    if "queue_depth_mean" in state:
+        series = (
+            ("swarm queue depth", {"mean": state["queue_depth_mean"],
+                                   "max": state["queue_depth_max"]}),
+            ("swarm tasks", {"in_flight": state["tasks_in_flight"],
+                             "completed": state["completed"],
+                             "dropped": state["dropped"]}),
+            ("swarm phi", {"mean": state["phi_mean"],
+                           "min": state["phi_min"],
+                           "max": state["phi_max"]}),
+            ("swarm energy_j", {"total": state["energy_j"]}),
+            ("swarm queue jain", {"jain": state["queue_jain"]}),
+        )
+        for s in range(len(state["epoch"])):
+            ts = float(ts_s[s]) * _US
+            for name, cols in series:
+                events.append({"ph": "C", "pid": 1, "name": name, "ts": ts,
+                               "args": {k: float(v[run][s])
+                                        for k, v in cols.items()}})
+    return events
+
+
 def chrome_trace_events(dec: Mapping, hops: Optional[Mapping] = None,
-                        tick_s: Optional[float] = None) -> List[Dict]:
+                        tick_s: Optional[float] = None,
+                        state: Optional[Mapping] = None) -> List[Dict]:
     """Decoded single-run records → Trace Event list (chronological).
 
     With ``hops`` (a ``decode_hops`` dict for the same run) the per-task
@@ -129,17 +192,23 @@ def chrome_trace_events(dec: Mapping, hops: Optional[Mapping] = None,
                            "ts": dec["completed_t"][i] * _US})
     if hops is not None:
         events += hop_trace_events(hops, tick_s)
+    if state is not None:
+        events += state_counter_events(state)
     return events
 
 
 def write_chrome_trace(path: str, dec: Mapping,
                        hops: Optional[Mapping] = None,
-                       tick_s: Optional[float] = None) -> str:
+                       tick_s: Optional[float] = None,
+                       state: Optional[Mapping] = None) -> str:
     """Write ``{"traceEvents": [...]}`` JSON; returns ``path``."""
-    doc = {"traceEvents": chrome_trace_events(dec, hops, tick_s),
+    doc = {"traceEvents": chrome_trace_events(dec, hops, tick_s, state),
            "displayTimeUnit": "ms",
            "otherData": {"schema": list(schema.FIELDS),
                          "hop_schema": list(schema.HOP_FIELDS)}}
+    if state is not None:
+        doc["otherData"]["state_schema"] = list(schema.STATE_GAUGES)
+        doc["otherData"]["state_sys_schema"] = list(schema.SYS_GAUGES)
     with open(path, "w") as f:
         json.dump(doc, f)
     return path

@@ -30,6 +30,17 @@ independently of the task stream (either can be on without the other)
 and carries its own per-node in-flight attribution (``hop_seq`` /
 ``hop_bits`` / ``hop_layer`` / ``hop_stall``), all absent at the default
 capacity 0.
+
+The state stream (``SwarmConfig.trace_state_every``; DESIGN.md §12) is
+simpler than either event stream because it is *epoch-indexed*: sample s
+belongs to epoch ``s * every``, so slot ``epoch // every`` is written
+exactly once, by exactly one epoch (non-sampled epochs target the
+out-of-bounds slot S and are dropped by the scatter mode).  There is no
+sequence counter, no overflow, and no ordering dependence — backend
+bit-parity is free.  One trace-only accumulator rides next to the
+buffers: ``state_e_tx`` [N], per-node cumulative transmit-airtime energy,
+accrued in ``transfer.progress`` exactly where the swarm-level ``e_tx``
+scalar accrues (it splits the scalar by sender; summarize never emits it).
 """
 from __future__ import annotations
 
@@ -83,6 +94,84 @@ def init_hops(cfg: SwarmConfig, n: int) -> dict:
         "hop_layer": jnp.zeros((n,), jnp.int32),
         "hop_stall": jnp.zeros((n,), jnp.int32),
     }
+
+
+def state_enabled(cfg: SwarmConfig) -> bool:
+    return cfg.trace_state_every > 0
+
+
+def num_state_samples(cfg: SwarmConfig) -> int:
+    """Static slot count S = ceil(n_epochs / every) of the state buffers."""
+    n_epochs = int(round(cfg.sim_time_s / cfg.decision_period_s))
+    return (n_epochs + cfg.trace_state_every - 1) // cfg.trace_state_every
+
+
+def state_nodes(cfg: SwarmConfig, n: int) -> int:
+    """Recorded node-panel width M = min(N, trace_state_nodes or N)."""
+    return min(n, cfg.trace_state_nodes or n)
+
+
+def init_state_stream(cfg: SwarmConfig, n: int) -> dict:
+    """State-stream entries for ``init_state`` — ``{}`` when off, so the
+    untraced state pytree is unchanged field-for-field."""
+    if not state_enabled(cfg):
+        return {}
+    S = num_state_samples(cfg)
+    M = state_nodes(cfg, n)
+    return {
+        "trace_state": jnp.zeros((S, M, schema.NUM_STATE_GAUGES),
+                                 jnp.float32),
+        "trace_state_sys": jnp.zeros((S, schema.NUM_SYS_GAUGES),
+                                     jnp.float32),
+        # epoch index of each written slot; -1 marks never-written (only
+        # possible if the scan ends before the slot's epoch)
+        "trace_state_epochs": jnp.full((S,), -1.0, jnp.float32),
+        # internal per-node tx-energy split of the e_tx scalar (not emitted)
+        "state_e_tx": jnp.zeros((n,), jnp.float32),
+    }
+
+
+def write_state(st, epoch_idx, t_end, cfg: SwarmConfig):
+    """Snapshot node gauges + system aggregates at the end of an epoch.
+
+    Called every epoch; epochs with ``epoch_idx % every != 0`` scatter to
+    the out-of-bounds slot S and are dropped.  ``t_end`` is the simulation
+    time at the end of the epoch.
+    """
+    S = st["trace_state"].shape[0]
+    M = st["trace_state"].shape[1]
+    every = cfg.trace_state_every
+    sampled = (epoch_idx % every) == 0
+    slot = jnp.where(sampled, epoch_idx // every, S)
+
+    qdepth = jnp.sum(st["q_active"], axis=1).astype(jnp.float32)
+    e_comp = st["proc_gflops"] * cfg.energy_per_gflop_j
+    inflight_bits = jnp.where(st["tx_active"],
+                              jnp.maximum(st["tx_bits"], 0.0), 0.0)
+    node_rows = jnp.stack(
+        [st["phi"][:M], qdepth[:M], e_comp[:M], st["state_e_tx"][:M],
+         st["alive"][:M].astype(jnp.float32), inflight_bits[:M]], axis=-1)
+
+    q = qdepth
+    jain = (jnp.sum(q) ** 2) / (q.shape[0] * jnp.sum(q * q) + 1e-12)
+    tx_act = jnp.sum(st["tx_active"].astype(jnp.float32))
+    sys_row = jnp.stack(
+        [t_end, jnp.sum(q) + tx_act, tx_act,
+         st["done_count"].astype(jnp.float32),
+         st["drop_count"].astype(jnp.float32),
+         st["gen_count"].astype(jnp.float32),
+         jnp.mean(q), jnp.max(q), jain,
+         jnp.mean(st["phi"]), jnp.min(st["phi"]), jnp.max(st["phi"]),
+         st["e_comp"] + st["e_tx"]]).astype(jnp.float32)
+
+    st = dict(st)
+    st["trace_state"] = st["trace_state"].at[slot].set(
+        node_rows, mode="drop")
+    st["trace_state_sys"] = st["trace_state_sys"].at[slot].set(
+        sys_row, mode="drop")
+    st["trace_state_epochs"] = st["trace_state_epochs"].at[slot].set(
+        epoch_idx.astype(jnp.float32), mode="drop")
+    return st
 
 
 def _scatter_records(st, key_records, key_overflow, mask, seq, rows):

@@ -47,6 +47,41 @@ come from stored traces instead of the net src→dst summary:
                       in-flight airtime = (t_arrive − t_depart) −
                       stall_ticks · tick_s
   ==================  =====================================================
+
+State stream (the flight recorder, ``SwarmConfig.trace_state_every``;
+DESIGN.md §12) — unlike the two event streams above it is *epoch-indexed*:
+sample s holds a snapshot taken at the end of epoch ``s * every``, so the
+buffers have statically-known shape [S, M, NUM_STATE_GAUGES] /
+[S, NUM_SYS_GAUGES] with S = ceil(n_epochs / every) and M = min(N, nodes).
+Every slot is written exactly once (no seq counter, no overflow concept).
+
+STATE_GAUGES — per-node columns of one snapshot row:
+
+  ===============  ========================================================
+  ``phi``          diffusive aggregated-GFLOPS metric φ_i
+  ``queue_depth``  active tasks queued at the node (instantaneous)
+  ``e_comp_j``     cumulative compute energy spent by the node, J
+  ``e_tx_j``       cumulative transmit (airtime) energy spent, J
+  ``alive``        1.0 while the fault process holds the node up
+  ``tx_bits``      bits still in flight on the node's outgoing transfer
+  ===============  ========================================================
+
+SYS_GAUGES — whole-swarm aggregates (always over all N nodes, independent
+of the node subsample):
+
+  ====================  ===================================================
+  ``t``                 simulation time at the snapshot, seconds
+  ``tasks_in_flight``   queued tasks + active transfers
+  ``transfers_active``  transfers currently in flight
+  ``completed``         cumulative completed tasks
+  ``dropped``           cumulative dropped tasks
+  ``generated``         cumulative generated tasks
+  ``queue_depth_mean``  mean queue depth over nodes
+  ``queue_depth_max``   max queue depth over nodes
+  ``queue_jain``        Jain fairness over instantaneous queue depths
+  ``phi_mean/min/max``  φ distribution summary (spread = max − min)
+  ``energy_j``          cumulative swarm energy (compute + transfer), J
+  ====================  ===================================================
 """
 from __future__ import annotations
 
@@ -115,3 +150,34 @@ def pack_hop(seq, src, dst, t_depart, t_arrive, bits, boundary_layer,
 def empty_hop_buffer(capacity: int) -> jnp.ndarray:
     """Unwritten ``[capacity, NUM_HOP_FIELDS]`` buffer (seq = -1)."""
     return jnp.full((capacity, NUM_HOP_FIELDS), -1.0, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# State stream (the flight recorder; epoch-indexed, see module docstring)
+# ---------------------------------------------------------------------------
+
+STATE_GAUGES = ("phi", "queue_depth", "e_comp_j", "e_tx_j", "alive",
+                "tx_bits")
+(ST_PHI, ST_QUEUE_DEPTH, ST_E_COMP_J, ST_E_TX_J, ST_ALIVE,
+ ST_TX_BITS) = range(len(STATE_GAUGES))
+NUM_STATE_GAUGES = len(STATE_GAUGES)
+
+SYS_GAUGES = ("t", "tasks_in_flight", "transfers_active", "completed",
+              "dropped", "generated", "queue_depth_mean", "queue_depth_max",
+              "queue_jain", "phi_mean", "phi_min", "phi_max", "energy_j")
+(SYS_T, SYS_TASKS_IN_FLIGHT, SYS_TRANSFERS_ACTIVE, SYS_COMPLETED,
+ SYS_DROPPED, SYS_GENERATED, SYS_QUEUE_DEPTH_MEAN, SYS_QUEUE_DEPTH_MAX,
+ SYS_QUEUE_JAIN, SYS_PHI_MEAN, SYS_PHI_MIN, SYS_PHI_MAX,
+ SYS_ENERGY_J) = range(len(SYS_GAUGES))
+NUM_SYS_GAUGES = len(SYS_GAUGES)
+
+
+def pack_state_sys_np(t, tasks_in_flight, transfers_active, completed,
+                      dropped, generated, queue_depth_mean, queue_depth_max,
+                      queue_jain, phi_mean=0.0, phi_min=0.0, phi_max=0.0,
+                      energy_j=0.0) -> np.ndarray:
+    """Host-side single system-gauge row (serving stack; f64 like pack_np)."""
+    return np.asarray([t, tasks_in_flight, transfers_active, completed,
+                       dropped, generated, queue_depth_mean, queue_depth_max,
+                       queue_jain, phi_mean, phi_min, phi_max, energy_j],
+                      np.float64)

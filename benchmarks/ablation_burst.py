@@ -11,7 +11,6 @@ from __future__ import annotations
 import dataclasses
 import os
 
-import numpy as np
 
 from benchmarks.common import ART, DEFAULT_RUNS, ci95, timed_sweep, write_csv
 from repro.configs.base import SwarmConfig

@@ -6,14 +6,12 @@
 """
 from __future__ import annotations
 
-import sys
 
 # must run through dryrun's XLA_FLAGS preamble
 from repro.launch import dryrun  # noqa: E402  (sets device count first)
 
 import argparse        # noqa: E402
 import dataclasses     # noqa: E402
-import json            # noqa: E402
 import os              # noqa: E402
 
 from repro.configs import get_config  # noqa: E402

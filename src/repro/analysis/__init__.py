@@ -1,0 +1,68 @@
+"""swarmlint — repo-native static analysis (DESIGN.md §13).
+
+The repo's correctness story rests on invariants that ordinary linters
+cannot see: bit-identical backends require strict PRNG key hygiene (PR 1
+fixed a threefry-correlated Random/RandomAcyclic coin), content-addressed
+caching requires every numerics-affecting config field to enter the store
+digest (PR 4 fixed ``trace_capacity`` aliasing), and the jitted scan must
+stay free of host-side impurity or it stops being a scan.  This package
+checks those invariants at the AST level, so a future PR that breaks one
+fails the tier-1 suite instead of corrupting a cache or an RNG stream.
+
+Rules (each in its own module):
+
+  * **R001 key-discipline** (``keys.py``)  — a ``jax.random`` key consumed
+    by two independent sinks inside one function body.
+  * **R002 digest-completeness** (``digest.py``) — every ``SwarmConfig`` /
+    ``SweepSpec`` field reaches ``fleet/store.point_digest`` or is listed
+    in the exemption table with a reason.
+  * **R003 in-scan purity** (``purity.py``) — no host-side effects in the
+    call graph reachable from ``run_sim`` / ``_epoch`` / ``_tick`` /
+    ``ServeEngine.step`` and the scenario-registry callables.
+  * **R004 registry/doc consistency** (``consistency.py``) — every
+    registry key is referenced by a test and documented in DESIGN.md;
+    ``DESIGN.md §N[.M]`` docstring citations must resolve.
+
+Entry points: ``python -m repro.analysis`` (CLI, nonzero exit on
+unbaselined findings) and :func:`run` (used by ``tests/test_analysis.py``
+to keep the tree clean under tier-1).  Deliberate violations are
+allowlisted per (rule, file, symbol) in ``analysis_baseline.toml`` at the
+repo root — every entry carries a ``reason`` string.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+from repro.analysis.astutil import Finding, Tree
+from repro.analysis.baseline import Baseline, load_baseline
+from repro.analysis import consistency, digest, keys, purity
+
+RULES = {
+    "R001": keys.check,
+    "R002": digest.check,
+    "R003": purity.check,
+    "R004": consistency.check,
+}
+
+RULE_DOCS = {
+    "R001": "PRNG key consumed by two independent sinks (def-use)",
+    "R002": "config field missing from the store digest (no exemption)",
+    "R003": "host-side impurity reachable from the jitted scan",
+    "R004": "registry key untested/undocumented, or dangling §-citation",
+}
+
+
+def run(root: str, rules: Optional[Sequence[str]] = None,
+        baseline: Optional[Baseline] = None,
+        use_baseline: bool = True) -> List[Finding]:
+    """Run ``rules`` (default: all) over the tree at ``root``; returns the
+    findings that survive the baseline (i.e. the ones that should fail)."""
+    tree = Tree.load(root)
+    if baseline is None and use_baseline:
+        baseline = load_baseline(root)
+    findings: List[Finding] = []
+    for rid in rules or sorted(RULES):
+        findings.extend(RULES[rid](tree, baseline))
+    if baseline is not None:
+        findings = [f for f in findings if not baseline.allows(f)]
+    return sorted(findings, key=lambda f: (f.file, f.line, f.rule))

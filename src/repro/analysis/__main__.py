@@ -1,0 +1,90 @@
+"""``python -m repro.analysis`` — run swarmlint over a repo tree.
+
+Exit status 0 when the tree is clean (after the baseline), 1 when any
+finding survives, 2 on usage/configuration errors.  ``--format json``
+emits one machine-readable document (findings + counts) for CI tooling;
+the default text format is one ``file:line: RULE symbol message`` row per
+finding, grep- and editor-friendly.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from repro.analysis import RULE_DOCS, RULES, run
+from repro.analysis.baseline import BASELINE_NAME, load_baseline
+
+
+def _detect_root(start: str) -> str:
+    """Walk up from ``start`` to the nearest directory that looks like the
+    repo root (has ``src/`` and ``DESIGN.md`` or the baseline file)."""
+    cur = os.path.abspath(start)
+    while True:
+        if os.path.isdir(os.path.join(cur, "src")) and (
+                os.path.isfile(os.path.join(cur, "DESIGN.md"))
+                or os.path.isfile(os.path.join(cur, BASELINE_NAME))):
+            return cur
+        parent = os.path.dirname(cur)
+        if parent == cur:
+            return os.path.abspath(start)
+        cur = parent
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="swarmlint: repo-native static analysis (DESIGN.md §13)")
+    ap.add_argument("--root", default=None,
+                    help="repo root to scan (default: auto-detect upward "
+                         "from the working directory)")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule ids (default: all)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help=f"ignore {BASELINE_NAME} and report everything")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rid in sorted(RULES):
+            print(f"{rid}  {RULE_DOCS[rid]}")
+        return 0
+
+    root = os.path.abspath(args.root) if args.root else _detect_root(".")
+    rules = None
+    if args.rules:
+        rules = [r.strip().upper() for r in args.rules.split(",") if r.strip()]
+        unknown = set(rules) - set(RULES)
+        if unknown:
+            print(f"unknown rules: {sorted(unknown)} "
+                  f"(known: {sorted(RULES)})", file=sys.stderr)
+            return 2
+
+    try:
+        baseline = None if args.no_baseline else load_baseline(root)
+        findings = run(root, rules=rules, baseline=baseline,
+                       use_baseline=not args.no_baseline)
+    except ValueError as e:       # malformed baseline is a hard error
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+
+    baselined = baseline.count if baseline else 0
+    if args.format == "json":
+        print(json.dumps({
+            "root": root,
+            "rules": rules or sorted(RULES),
+            "baselined": baselined,
+            "findings": [f.to_dict() for f in findings],
+        }, indent=2, sort_keys=True))
+    else:
+        for f in findings:
+            print(f"{f.file}:{f.line}: {f.rule} [{f.symbol}] {f.message}")
+        tag = f" ({baselined} baselined)" if baselined else ""
+        print(f"swarmlint: {len(findings)} finding(s){tag} in {root}")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,177 @@
+"""Shared AST plumbing for the swarmlint rules.
+
+A :class:`Tree` is a parsed snapshot of one repository (or fixture mini-
+repo): every ``.py`` file under the scanned directories as an
+``ast.Module`` plus the raw text of ``DESIGN.md``.  Rules never read the
+filesystem themselves — they work off the tree, which is what lets the
+fixture tests under ``tests/analysis_fixtures/`` run each rule against a
+tiny synthetic repo with the exact same code path as the real one.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+from typing import Dict, Iterator, List, Optional, Tuple
+
+# directories that never contain rule subjects (fixtures are deliberately
+# broken; artifacts/caches are not code)
+SKIP_DIRS = {"analysis_fixtures", "artifacts", "__pycache__", ".git",
+             ".claude", "node_modules"}
+SCAN_DIRS = ("src", "tests", "benchmarks", "examples")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str          # "R001" … "R004"
+    file: str          # repo-relative posix path
+    line: int
+    symbol: str        # rule-specific anchor, e.g. "init_state:key"
+    message: str
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class Module:
+    path: str          # repo-relative posix path
+    tree: ast.Module
+    source: str
+
+
+class Tree:
+    """Parsed repo snapshot: ``.py`` modules + DESIGN.md text."""
+
+    def __init__(self, root: str, modules: Dict[str, Module],
+                 texts: Dict[str, str]):
+        self.root = root
+        self.modules = modules
+        self._texts = texts
+
+    @classmethod
+    def load(cls, root: str) -> "Tree":
+        root = os.path.abspath(root)
+        modules: Dict[str, Module] = {}
+        for base in SCAN_DIRS:
+            top = os.path.join(root, base)
+            if not os.path.isdir(top):
+                continue
+            for dirpath, dirnames, filenames in os.walk(top):
+                dirnames[:] = [d for d in sorted(dirnames)
+                               if d not in SKIP_DIRS]
+                for fn in sorted(filenames):
+                    if not fn.endswith(".py"):
+                        continue
+                    full = os.path.join(dirpath, fn)
+                    rel = os.path.relpath(full, root).replace(os.sep, "/")
+                    try:
+                        with open(full, encoding="utf-8") as f:
+                            src = f.read()
+                        modules[rel] = Module(rel, ast.parse(src), src)
+                    except (SyntaxError, UnicodeDecodeError, OSError):
+                        continue   # unparseable files are ruff's problem
+        texts = {}
+        for doc in ("DESIGN.md",):
+            p = os.path.join(root, doc)
+            if os.path.isfile(p):
+                with open(p, encoding="utf-8") as f:
+                    texts[doc] = f.read()
+        return cls(root, modules, texts)
+
+    def text(self, name: str) -> Optional[str]:
+        return self._texts.get(name)
+
+    def src_modules(self) -> Iterator[Module]:
+        """Modules under ``src/`` — the rule *subjects* (tests and
+        benchmarks are evidence, not subjects)."""
+        for path, mod in self.modules.items():
+            if path.startswith("src/"):
+                yield mod
+
+    def test_sources(self) -> str:
+        """Concatenated raw text of every test module (R004 evidence)."""
+        return "\n".join(m.source for p, m in sorted(self.modules.items())
+                         if p.startswith("tests/"))
+
+
+# ---------------------------------------------------------------------------
+# import/alias resolution
+# ---------------------------------------------------------------------------
+
+
+def import_table(mod: ast.Module) -> Dict[str, str]:
+    """Maps local name -> dotted origin for a module's imports.
+
+    ``import numpy as np``            -> {"np": "numpy"}
+    ``import jax.random as jr``       -> {"jr": "jax.random"}
+    ``import time``                   -> {"time": "time"}
+    ``from time import time``         -> {"time": "time.time"}
+    ``from repro.trace import record as tr`` -> {"tr": "repro.trace.record"}
+    """
+    table: Dict[str, str] = {}
+    for node in ast.walk(mod):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                table[alias.asname or alias.name.split(".")[0]] = (
+                    alias.name if alias.asname else alias.name.split(".")[0])
+                if alias.asname:
+                    table[alias.asname] = alias.name
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            for alias in node.names:
+                table[alias.asname or alias.name] = (
+                    f"{node.module}.{alias.name}")
+    return table
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` attribute/name chain as a dotted string, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def resolve_call(node: ast.Call, imports: Dict[str, str]) -> Optional[str]:
+    """Fully-qualified dotted name of a call target, import-resolved.
+
+    ``np.random.default_rng(...)`` with ``import numpy as np`` resolves to
+    ``numpy.random.default_rng``; plain builtins resolve to themselves.
+    """
+    name = dotted_name(node.func)
+    if name is None:
+        return None
+    head, _, rest = name.partition(".")
+    origin = imports.get(head)
+    if origin is None:
+        return name
+    return f"{origin}.{rest}" if rest else origin
+
+
+def functions(mod: ast.Module) -> Dict[str, ast.AST]:
+    """{qualname: FunctionDef} for module-level functions and methods
+    (methods as ``Class.method``)."""
+    out: Dict[str, ast.AST] = {}
+    for node in mod.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            out[node.name] = node
+        elif isinstance(node, ast.ClassDef):
+            for sub in node.body:
+                if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    out[f"{node.name}.{sub.name}"] = sub
+    return out
+
+
+def docstrings(mod: ast.Module) -> Iterator[Tuple[int, str]]:
+    """(line, text) of every docstring in the module."""
+    for node in ast.walk(mod):
+        if isinstance(node, (ast.Module, ast.ClassDef, ast.FunctionDef,
+                             ast.AsyncFunctionDef)):
+            doc = ast.get_docstring(node, clean=False)
+            if doc:
+                first = node.body[0]
+                yield first.lineno, doc

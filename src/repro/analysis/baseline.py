@@ -1,0 +1,119 @@
+"""Baseline / exemption file for swarmlint (``analysis_baseline.toml``).
+
+Two table arrays:
+
+``[[allow]]`` — one deliberate finding, matched by (rule, file, symbol)::
+
+    [[allow]]
+    rule = "R001"
+    file = "src/repro/swarm/simulator.py"
+    symbol = "_epoch:key"
+    reason = "scenario keys folded off the epoch key for bit-identity"
+
+Line numbers are deliberately *not* part of the match, so baselines
+survive unrelated edits; ``symbol`` is the rule's stable anchor (function-
+qualified variable for R001, function qualname for R003, …).  Every entry
+must carry a non-empty ``reason`` — entries without one are rejected at
+load time, which is the enforcement half of the "baseline with
+justification" workflow (DESIGN.md §13).
+
+``[[digest_exempt]]`` — R002's table of deliberately digest-excluded
+fields, ``field = "Class.field"`` (or ``"function.param"``) plus
+``reason``.  R002 validates each entry against the live dataclass/function
+and flags stale or shadowed entries, so the table cannot rot.
+
+Parsing: ``tomllib`` when available (Python ≥ 3.11), else a strict
+fallback reader for exactly this shape (table arrays of ``key = "string"``
+pairs) — the file format is kept to that subset on purpose so the suite
+has zero dependencies beyond the repo's own requirements.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import re
+from typing import Dict, List, Optional
+
+from repro.analysis.astutil import Finding
+
+BASELINE_NAME = "analysis_baseline.toml"
+
+try:
+    import tomllib as _toml
+except ImportError:                                    # Python < 3.11
+    _toml = None
+
+_KV = re.compile(r'^([A-Za-z_][A-Za-z0-9_]*)\s*=\s*"((?:[^"\\]|\\.)*)"\s*$')
+
+
+def _parse_subset(text: str) -> Dict[str, List[Dict[str, str]]]:
+    """Fallback parser for the table-array-of-string-pairs TOML subset."""
+    doc: Dict[str, List[Dict[str, str]]] = {}
+    current: Optional[Dict[str, str]] = None
+    for lineno, raw in enumerate(text.splitlines(), 1):
+        line = raw.strip()
+        if not line or line.startswith("#"):
+            continue
+        if line.startswith("[[") and line.endswith("]]"):
+            name = line[2:-2].strip()
+            current = {}
+            doc.setdefault(name, []).append(current)
+            continue
+        m = _KV.match(line)
+        if m and current is not None:
+            current[m.group(1)] = (m.group(2)
+                                   .replace('\\"', '"').replace("\\\\", "\\"))
+            continue
+        raise ValueError(
+            f"{BASELINE_NAME}:{lineno}: unsupported syntax {line!r} "
+            "(the baseline sticks to [[table]] arrays of key = \"string\")")
+    return doc
+
+
+@dataclasses.dataclass(frozen=True)
+class Baseline:
+    allows_: tuple     # of (rule, file, symbol)
+    digest_exempt: Dict[str, str]      # field -> reason
+    path: Optional[str] = None
+
+    def allows(self, f: Finding) -> bool:
+        return (f.rule, f.file, f.symbol) in self.allows_
+
+    @property
+    def count(self) -> int:
+        return len(self.allows_)
+
+
+def parse_baseline(text: str, path: Optional[str] = None) -> Baseline:
+    doc = (_toml.loads(text) if _toml is not None else _parse_subset(text))
+    allows = []
+    for i, entry in enumerate(doc.get("allow", [])):
+        missing = {"rule", "file", "symbol", "reason"} - set(entry)
+        if missing:
+            raise ValueError(
+                f"[[allow]] entry {i} is missing {sorted(missing)}")
+        if not str(entry["reason"]).strip():
+            raise ValueError(
+                f"[[allow]] entry {i} ({entry['rule']} {entry['symbol']}) "
+                "has an empty reason — baselines must be justified")
+        allows.append((entry["rule"], entry["file"], entry["symbol"]))
+    exempt: Dict[str, str] = {}
+    for i, entry in enumerate(doc.get("digest_exempt", [])):
+        missing = {"field", "reason"} - set(entry)
+        if missing:
+            raise ValueError(
+                f"[[digest_exempt]] entry {i} is missing {sorted(missing)}")
+        if not str(entry["reason"]).strip():
+            raise ValueError(
+                f"[[digest_exempt]] entry {i} ({entry['field']}) has an "
+                "empty reason — exemptions must be justified")
+        exempt[entry["field"]] = entry["reason"]
+    return Baseline(tuple(allows), exempt, path)
+
+
+def load_baseline(root: str) -> Optional[Baseline]:
+    path = os.path.join(root, BASELINE_NAME)
+    if not os.path.isfile(path):
+        return None
+    with open(path, encoding="utf-8") as f:
+        return parse_baseline(f.read(), path)

@@ -1,0 +1,202 @@
+"""R001 — PRNG key discipline (def-use over function bodies).
+
+The invariant: a ``jax.random`` key is consumed **once**.  Handing the
+same key to two independent sinks — two samplers, a sampler and ``split``,
+or a sampler and ``fold_in`` — produces threefry-counter-correlated
+streams: the exact bug PR 1 fixed, where the Random/RandomAcyclic offload
+coin reused the gumbel target-draw key and "who offloads" became
+bit-correlated with "who gets picked".
+
+Analysis (per function body, nested defs included — a closure that
+captures an outer key consumes it on the outer function's behalf):
+
+  * **key variables** are parameters named ``key`` / ``rng`` / ``*_key``,
+    and any variable assigned (or tuple-unpacked) from
+    ``jax.random.split`` / ``fold_in`` / ``PRNGKey``;
+  * a **consumption** is any use of a key variable as a call argument —
+    sampler, ``split``, ``fold_in``, or an opaque callee (which must be
+    assumed to consume it);
+  * rebinding (``key = fold_in(key, 1)``) starts a fresh def with its own
+    use count; ``if``/``else`` arms count as alternatives (max), not as a
+    sequence (sum), so branch-exclusive uses don't false-positive.
+
+A variable with ≥ 2 consumptions is a finding anchored at
+``func:variable``.  Scope: ``swarm/``, ``core/``, ``trace/`` under
+``src/`` — the modules whose streams the bit-identity contracts cover.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Tuple
+
+from repro.analysis.astutil import (Finding, Module, Tree, dotted_name,
+                                    import_table)
+
+RULE = "R001"
+SCOPES = ("/swarm/", "/core/", "/trace/")
+# jax.random constructors whose *result* is a key (tracked as new defs)
+KEY_MAKERS = {"split", "fold_in", "PRNGKey", "key", "clone"}
+_PARAM_KEY = ("key", "rng")
+
+
+def _is_key_param(name: str) -> bool:
+    return name in _PARAM_KEY or name.endswith("_key")
+
+
+class _RandomNS:
+    """Recognizes ``jax.random.<fn>`` under the module's import aliases."""
+
+    def __init__(self, mod: Module):
+        self.imports = import_table(mod.tree)
+
+    def maker_call(self, node: ast.AST) -> Optional[str]:
+        """'split' / 'fold_in' / 'PRNGKey' if node is such a call."""
+        if not isinstance(node, ast.Call):
+            return None
+        name = dotted_name(node.func)
+        if name is None:
+            return None
+        head, _, rest = name.partition(".")
+        full = name
+        if head in self.imports:
+            origin = self.imports[head]
+            full = f"{origin}.{rest}" if rest else origin
+        if full.startswith("jax.random.") and full.rsplit(".", 1)[-1] in \
+                KEY_MAKERS:
+            return full.rsplit(".", 1)[-1]
+        return None
+
+
+class _Counts:
+    """Per-def consumption counts: def id -> (var, line-of-def, [uses])."""
+
+    def __init__(self):
+        self.defs: Dict[int, Tuple[str, int, List[int]]] = {}
+        self.env: Dict[str, int] = {}      # var name -> live def id
+        self._next = 0
+
+    def bind(self, var: str, line: int) -> None:
+        self.defs[self._next] = (var, line, [])
+        self.env[var] = self._next
+        self._next += 1
+
+    def use(self, var: str, line: int) -> None:
+        if var in self.env:
+            self.defs[self.env[var]][2].append(line)
+
+
+def _scan_function(fn: ast.AST, ns: _RandomNS, mod: Module,
+                   findings: List[Finding]) -> None:
+    counts = _Counts()
+    for arg in ([*fn.args.posonlyargs, *fn.args.args, *fn.args.kwonlyargs]
+                if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef))
+                else []):
+        if _is_key_param(arg.arg):
+            counts.bind(arg.arg, fn.lineno)
+
+    def scan_expr(node: ast.AST) -> None:
+        """Count key uses inside one expression (call args only)."""
+        for call in [n for n in ast.walk(node) if isinstance(n, ast.Call)]:
+            args = list(call.args) + [kw.value for kw in call.keywords]
+            for a in args:
+                if isinstance(a, ast.Name) and a.id in counts.env:
+                    counts.use(a.id, a.lineno)
+
+    def bind_targets(target: ast.AST, value: ast.AST) -> None:
+        """Track key defs created by an assignment."""
+        if ns.maker_call(value) is None:
+            return
+        names = []
+        if isinstance(target, ast.Name):
+            names = [target]
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            names = [e for e in target.elts if isinstance(e, ast.Name)]
+        for name in names:
+            counts.bind(name.id, name.lineno)
+
+    def scan_block(stmts) -> None:
+        for stmt in stmts:
+            if isinstance(stmt, ast.Assign):
+                scan_expr(stmt.value)
+                for t in stmt.targets:
+                    bind_targets(t, stmt.value)
+            elif isinstance(stmt, (ast.AnnAssign, ast.AugAssign)):
+                if stmt.value is not None:
+                    scan_expr(stmt.value)
+                if isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+                    bind_targets(stmt.target, stmt.value)
+            elif isinstance(stmt, ast.If):
+                scan_expr(stmt.test)
+                _scan_branches([stmt.body, stmt.orelse])
+            elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+                scan_expr(stmt.iter)
+                _scan_branches([stmt.body + stmt.orelse])
+            elif isinstance(stmt, ast.While):
+                scan_expr(stmt.test)
+                _scan_branches([stmt.body + stmt.orelse])
+            elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+                for item in stmt.items:
+                    scan_expr(item.context_expr)
+                scan_block(stmt.body)
+            elif isinstance(stmt, ast.Try):
+                _scan_branches([stmt.body + stmt.finalbody]
+                               + [h.body for h in stmt.handlers])
+            elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                # closure body: uses of *outer* keys count against them;
+                # the nested function's own keys are scanned separately
+                inner = {a.arg for a in stmt.args.args}
+                for call in [n for n in ast.walk(stmt)
+                             if isinstance(n, ast.Call)]:
+                    for a in (list(call.args)
+                              + [kw.value for kw in call.keywords]):
+                        if (isinstance(a, ast.Name) and a.id not in inner
+                                and a.id in counts.env):
+                            counts.use(a.id, a.lineno)
+            elif isinstance(stmt, (ast.Return, ast.Expr)):
+                if stmt.value is not None:
+                    scan_expr(stmt.value)
+            else:
+                scan_expr(stmt)
+
+    def _scan_branches(branches) -> None:
+        """Mutually exclusive arms: per-def use count is the max over
+        arms, not the sum — a key consumed once in *each* arm of an
+        if/else is consumed once per execution."""
+        before = {i: len(uses) for i, (_, _, uses) in counts.defs.items()}
+        best: Dict[int, List[int]] = {}
+        for branch in branches:
+            # rewind to the pre-branch counts, scan, keep the max
+            for i, (_, _, uses) in counts.defs.items():
+                del uses[before.get(i, 0):]
+            env_before = dict(counts.env)
+            scan_block(branch)
+            for i, (_, _, uses) in counts.defs.items():
+                new = uses[before.get(i, 0):]
+                if len(new) > len(best.get(i, [])):
+                    best[i] = list(new)
+            counts.env = env_before
+        for i, (_, _, uses) in counts.defs.items():
+            del uses[before.get(i, 0):]
+            uses.extend(best.get(i, []))
+
+    scan_block(fn.body)
+    for var, line, uses in counts.defs.values():
+        if len(uses) >= 2:
+            findings.append(Finding(
+                RULE, mod.path, uses[1], f"{fn.name}:{var}",
+                f"key {var!r} (defined line {line}) is consumed "
+                f"{len(uses)} times (lines {', '.join(map(str, uses))}); "
+                "split or fold_in fresh subkeys per sink"))
+
+
+def check(tree: Tree, baseline=None) -> List[Finding]:
+    del baseline
+    findings: List[Finding] = []
+    for mod in tree.src_modules():
+        if not any(s in f"/{mod.path}" for s in SCOPES):
+            continue
+        ns = _RandomNS(mod)
+        for node in ast.walk(mod.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                _scan_function(node, ns, mod, findings)
+    return findings

@@ -1,0 +1,197 @@
+"""R003 — in-scan purity.
+
+``run_sim`` is one jitted ``lax.scan``; everything in its call graph runs
+under trace.  A host-side effect there — wall clocks, ``np.random``,
+``io_callback`` / ``host_callback``, file or console I/O, ``datetime`` —
+either breaks tracing outright or (worse) silently bakes one host value
+into the compiled executable, destroying the bit-identical-backends
+contract the fleet store's cache keys rely on.  The serve engine's
+``step`` shares the constraint: its determinism contract (PR 3) is that
+all timestamps come from the caller's clock domain, never wall time.
+
+The rule builds a conservative static call graph over the tree:
+
+  * **roots** — ``run_sim`` / ``_epoch`` / ``_tick`` wherever defined,
+    ``step`` methods of ``ServeEngine``-named classes, and every callable
+    registered into the scenario registries (``register_mobility`` /
+    ``register_channel`` / ``register_channel_edges`` / ``register_fault``
+    call sites), since registry dispatch is invisible to static analysis;
+  * **edges** — direct calls, ``from``-imported names, module-alias
+    attribute calls (``trace_record.write_records``), and ``self.``
+    method calls, resolved against each module's import table; calls into
+    code outside the tree are ignored.
+
+Any reachable function whose body calls a banned API is a finding
+anchored at the function's qualname, with the root→…→function chain in
+the message.  Host-side helpers that are *legitimately* impure (e.g. the
+fleet dispatch heartbeat, if it ever becomes reachable) go on the
+``[[allow]]`` baseline with a reason.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Tuple
+
+from repro.analysis.astutil import (Finding, Tree, dotted_name, functions,
+                                    import_table, resolve_call)
+
+RULE = "R003"
+ROOT_FUNCS = {"run_sim", "_epoch", "_tick"}
+ROOT_METHODS = {("ServeEngine", "step")}
+REGISTER_FUNCS = {"register_mobility", "register_channel",
+                  "register_channel_edges", "register_fault"}
+
+BANNED_PREFIXES = (
+    "time.", "datetime.", "numpy.random", "random.",
+    "jax.experimental.io_callback", "jax.experimental.host_callback",
+    "jax.pure_callback", "jax.debug.callback", "jax.debug.print",
+)
+BANNED_EXACT = {"open", "print", "input", "time", "datetime"}
+
+
+def _banned(full: str) -> Optional[str]:
+    if full in BANNED_EXACT:
+        return full
+    for p in BANNED_PREFIXES:
+        if full == p.rstrip(".") or full.startswith(p):
+            return full
+    return None
+
+
+class _Graph:
+    """qualname-level call graph, keyed by (module path, qualname)."""
+
+    def __init__(self, tree: Tree):
+        self.tree = tree
+        self.funcs: Dict[Tuple[str, str], ast.AST] = {}
+        self.imports: Dict[str, Dict[str, str]] = {}
+        self.by_name: Dict[str, List[Tuple[str, str]]] = {}
+        self.module_of: Dict[str, str] = {}   # dotted module -> path
+        for mod in tree.src_modules():
+            self.imports[mod.path] = import_table(mod.tree)
+            for qual, fn in functions(mod.tree).items():
+                self.funcs[(mod.path, qual)] = fn
+                self.by_name.setdefault(qual.split(".")[-1], []).append(
+                    (mod.path, qual))
+            dotted = (mod.path[len("src/"):-len(".py")]
+                      .replace("/__init__", "").replace("/", "."))
+            self.module_of[dotted] = mod.path
+
+    def _module_path(self, dotted: str) -> Optional[str]:
+        """Resolve a dotted module name to a tree path (suffix-tolerant,
+        so fixture trees with shallow layouts still resolve)."""
+        if dotted in self.module_of:
+            return self.module_of[dotted]
+        for name, path in self.module_of.items():
+            if name.endswith("." + dotted) or dotted.endswith("." + name):
+                return path
+        return None
+
+    def callees(self, path: str, qual: str) -> List[Tuple[str, str]]:
+        fn = self.funcs[(path, qual)]
+        imports = self.imports[path]
+        cls = qual.split(".")[0] if "." in qual else None
+        out: List[Tuple[str, str]] = []
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted_name(node.func)
+            if name is None:
+                continue
+            parts = name.split(".")
+            if parts[0] == "self" and cls and len(parts) == 2:
+                key = (path, f"{cls}.{parts[1]}")
+                if key in self.funcs:
+                    out.append(key)
+                continue
+            if len(parts) == 1:
+                # bare name: same module, else a from-import
+                if (path, parts[0]) in self.funcs:
+                    out.append((path, parts[0]))
+                    continue
+                origin = imports.get(parts[0])
+                if origin and "." in origin:
+                    mod_dotted, fname = origin.rsplit(".", 1)
+                    tgt = self._module_path(mod_dotted)
+                    if tgt and (tgt, fname) in self.funcs:
+                        out.append((tgt, fname))
+                continue
+            # attribute call: resolve the head as a module alias
+            origin = imports.get(parts[0])
+            if origin:
+                dotted = ".".join([origin] + parts[1:-1])
+                tgt = self._module_path(dotted)
+                if tgt and (tgt, parts[-1]) in self.funcs:
+                    out.append((tgt, parts[-1]))
+        return out
+
+    def banned_calls(self, path: str, qual: str) -> List[Tuple[int, str]]:
+        fn = self.funcs[(path, qual)]
+        imports = self.imports[path]
+        hits = []
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                full = resolve_call(node, imports)
+                if full is not None:
+                    b = _banned(full)
+                    if b is not None:
+                        hits.append((node.lineno, b))
+        return hits
+
+
+def _roots(graph: _Graph, tree: Tree) -> List[Tuple[str, str]]:
+    roots: List[Tuple[str, str]] = []
+    for (path, qual), _fn in graph.funcs.items():
+        base = qual.split(".")[-1]
+        if "." not in qual and base in ROOT_FUNCS:
+            roots.append((path, qual))
+        if "." in qual and tuple(qual.split(".", 1)) in {
+                (c, m) for c, m in ROOT_METHODS}:
+            roots.append((path, qual))
+    # registry-registered callables are dispatch targets of the scan
+    for mod in tree.src_modules():
+        imports = graph.imports[mod.path]
+        for node in ast.walk(mod.tree):
+            if not (isinstance(node, ast.Call)
+                    and (dotted_name(node.func) or "").split(".")[-1]
+                    in REGISTER_FUNCS):
+                continue
+            for a in node.args[1:]:
+                name = dotted_name(a)
+                if name is None:
+                    continue
+                parts = name.split(".")
+                if len(parts) == 1 and (mod.path, parts[0]) in graph.funcs:
+                    roots.append((mod.path, parts[0]))
+                elif len(parts) > 1:
+                    origin = imports.get(parts[0])
+                    if origin:
+                        dotted = ".".join([origin] + parts[1:-1])
+                        tgt = graph._module_path(dotted)
+                        if tgt and (tgt, parts[-1]) in graph.funcs:
+                            roots.append((tgt, parts[-1]))
+    return sorted(set(roots))
+
+
+def check(tree: Tree, baseline=None) -> List[Finding]:
+    del baseline
+    graph = _Graph(tree)
+    findings: List[Finding] = []
+    chain: Dict[Tuple[str, str], Tuple[str, ...]] = {}
+    stack = []
+    for r in _roots(graph, tree):
+        chain[r] = (r[1],)
+        stack.append(r)
+    while stack:
+        cur = stack.pop()
+        for nxt in graph.callees(*cur):
+            if nxt not in chain:
+                chain[nxt] = chain[cur] + (nxt[1],)
+                stack.append(nxt)
+    for (path, qual), trail in sorted(chain.items()):
+        for line, api in graph.banned_calls(path, qual):
+            findings.append(Finding(
+                RULE, path, line, qual,
+                f"host-side call {api!r} is reachable from the jitted "
+                f"scan via {' -> '.join(trail)}"))
+    return findings

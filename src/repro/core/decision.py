@@ -9,7 +9,7 @@ Vectorized over all nodes at once.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

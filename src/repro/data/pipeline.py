@@ -12,9 +12,8 @@ from __future__ import annotations
 import queue
 import threading
 from dataclasses import dataclass
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -39,7 +39,7 @@ scalar metrics (tested in ``tests/test_trace.py`` /
 ``tests/test_hops.py``).  The state stream (``trace_state_every > 0``,
 DESIGN.md §12) is three more such leaves, nothing backend-specific.
 
-Self-profiling (DESIGN.md §12.3): every backend builds its executable
+Self-profiling (DESIGN.md §12): every backend builds its executable
 ahead-of-time (``jax.jit(fn).lower(...).compile()`` — same jaxpr and HLO
 as dispatching through ``jit``, so numerics are bit-identical; pinned by
 ``tests/test_state_trace.py``), which splits the first-call wall clock

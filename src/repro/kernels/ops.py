@@ -8,10 +8,8 @@ path in interpret mode (used by the kernel integration tests).
 from __future__ import annotations
 
 import os
-from functools import partial
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention as _pl_decode

@@ -1,10 +1,9 @@
 """Train/serve step builders shared by the dry-run, train.py and serve.py."""
 from __future__ import annotations
 
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, NamedTuple, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeConfig
@@ -81,7 +80,7 @@ def cell_structs(cfg: ModelConfig, shape: ShapeConfig, mesh):
     prefill: prefill(params, batch)
     decode : decode_step(params, caches, batch)
     """
-    from repro.launch.mesh import batch_axes_of, shardings
+    from repro.launch.mesh import shardings
 
     model = build_model(cfg, mesh=mesh)
     key = jax.random.PRNGKey(0)

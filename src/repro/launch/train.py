@@ -8,16 +8,13 @@ is identical to the production one (same step builder as the dry-run).
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config, reduced
 from repro.data import DataConfig, batch_at
-from repro.launch.step import (TrainState, init_train_state, make_train_step,
-                               train_state_specs)
+from repro.launch.step import init_train_state, make_train_step
 from repro.models import build_model
 from repro.optim import OptConfig
 from repro.runtime import DriverConfig, run_with_restarts

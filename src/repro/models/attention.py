@@ -14,15 +14,14 @@ Two execution paths:
 from __future__ import annotations
 
 import math
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
-from repro.models.common import (apply_norm, apply_rope, dense_init,
-                                 rms_head_norm, rope_angles, specs_norm)
+from repro.models.common import (apply_rope, dense_init, rms_head_norm,
+                                 rope_angles)
 
 NEG_INF = -1e30
 

@@ -11,7 +11,6 @@ tractable: the decode cache is O(window + lru_width), not O(S).
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -23,9 +22,8 @@ from repro.models import mlp as mlp_mod
 from repro.models import rglru
 from repro.models.common import (apply_norm, dt, embed_init, init_norm,
                                  scan_fn, specs_norm)
-from repro.models.transformer import (batch_axes_of, cast_weights,
-                                      head_loss, head_out, lm_loss,
-                                      remat_wrap, shard_hint)
+from repro.models.transformer import (batch_axes_of, cast_weights, head_loss,
+                                      head_out, remat_wrap, shard_hint)
 
 
 def _pattern(cfg: ModelConfig):

@@ -17,7 +17,6 @@ communication-free).
 from __future__ import annotations
 
 import math
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -19,8 +19,7 @@ is what the CPU smoke tests exercise.
 from __future__ import annotations
 
 import math
-from functools import partial
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

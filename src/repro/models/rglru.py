@@ -13,8 +13,6 @@ blocks align with the 16-way 'model' sharding of the width dimension.
 """
 from __future__ import annotations
 
-import math
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

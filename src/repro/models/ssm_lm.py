@@ -14,9 +14,8 @@ from repro.configs.base import ModelConfig
 from repro.models import mamba as mamba_mod
 from repro.models.common import (apply_norm, dt, embed_init, init_norm,
                                  scan_fn, specs_norm)
-from repro.models.transformer import (batch_axes_of, cast_weights,
-                                      head_loss, head_out, lm_loss,
-                                      remat_wrap, shard_hint)
+from repro.models.transformer import (batch_axes_of, cast_weights, head_loss,
+                                      head_out, remat_wrap, shard_hint)
 
 
 def init_ssm_lm(key, cfg: ModelConfig):

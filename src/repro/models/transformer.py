@@ -7,8 +7,7 @@ memory, and O(1) split-point extraction for the split-computing engine
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -20,7 +19,7 @@ from repro.models import attention as attn
 from repro.models import mlp as mlp_mod
 from repro.models import moe as moe_mod
 from repro.models.common import (apply_norm, dt, embed_init, init_norm,
-                                 scan_fn, slice_layers, specs_norm)
+                                 scan_fn, specs_norm)
 
 # ---------------------------------------------------------------------------
 # helpers

@@ -7,8 +7,7 @@ all fully sharded over ('data'[, 'pod']) × 'model'.
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -25,10 +25,9 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.early_exit import (CongestionState, congestion_update,
                                    exit_label)
-from repro.models import build_model
 from repro.models.common import slice_layers
 from repro.models.transformer import embed_in, head_out, run_layers
-from repro.splitcompute.partitioner import StagePlan, plan_stages
+from repro.splitcompute.partitioner import StagePlan
 from repro.trace import schema
 
 

@@ -56,8 +56,11 @@ STRATEGY_NAMES = ("LocalOnly", "Random", "RandomAcyclic", "Greedy",
 
 def init_state(key, cfg: SwarmConfig, n: int) -> Dict:
     Q = cfg.queue_slots
-    kf, km = jax.random.split(key)
-    k_fault = jax.random.fold_in(key, 7)
+    # one split, three independent subkeys (R001): the init key used to be
+    # dual-derived — split(key) for capability/mobility AND fold_in(key, 7)
+    # for faults, two sink families off one threefry counter.  The default-
+    # scenario streams this moves are pinned by test_default_scenario_rng_pin.
+    kf, km, k_fault = jax.random.split(key, 3)
     F = jnp.maximum(
         cfg.capability_mean
         + cfg.capability_std * jax.random.normal(kf, (n,), jnp.float32),
@@ -92,7 +95,12 @@ def init_state(key, cfg: SwarmConfig, n: int) -> Dict:
         # metric accumulators
         "done_count": jnp.float32(0), "lat_sum": jnp.float32(0),
         "acc_sum": jnp.float32(0), "proc_gflops": jnp.zeros((n,), jnp.float32),
-        "e_comp": jnp.float32(0), "e_tx": jnp.float32(0),
+        # energy accrues per node, not as a swarm scalar: elementwise
+        # accumulation is bit-identical under any batching (vmap, sharded,
+        # streaming chunks), whereas an in-scan cross-node sum reassociates
+        # with the batch shape and breaks backend parity at the ulp level
+        "e_comp": jnp.zeros((n,), jnp.float32),
+        "e_tx": jnp.zeros((n,), jnp.float32),
         "tx_count": jnp.float32(0), "tx_delivered": jnp.float32(0),
         "tx_time_sum": jnp.float32(0),
         "drop_count": jnp.float32(0), "gen_count": jnp.float32(0),
@@ -128,7 +136,7 @@ def _compute_pass(st, budget, targets_cum, t_now, cfg: SwarmConfig):
     st["q_cum"] = st["q_cum"].at[rows, head].set(
         jnp.where(has, new_cum, st["q_cum"][rows, head]))
     st["proc_gflops"] = st["proc_gflops"] + adv
-    st["e_comp"] = st["e_comp"] + jnp.sum(adv) * eJ
+    st["e_comp"] = st["e_comp"] + adv * eJ
     st["done_count"] = st["done_count"] + jnp.sum(completed)
     st["lat_sum"] = st["lat_sum"] + jnp.sum(jnp.where(completed, lat, 0.0))
     st["acc_sum"] = st["acc_sum"] + jnp.sum(jnp.where(completed, acc, 0.0))
@@ -412,7 +420,9 @@ def summarize(st, cfg: SwarmConfig, profile: TaskProfile) -> Dict:
     jain = (jnp.sum(x) ** 2) / (x.shape[0] * jnp.sum(x * x) + 1e-12)
     tps = st["done_count"] / cfg.sim_time_s
     acc = st["acc_sum"] / done
-    ae = (st["e_comp"] + st["e_tx"]) / done
+    # single cross-node reduction, outside the scan (see init_state note)
+    e_total = jnp.sum(st["e_comp"] + st["e_tx"])
+    ae = e_total / done
     al = st["lat_sum"] / done
     fom = tps * acc / jnp.maximum(ae * al, 1e-12)
     out = {
@@ -428,7 +438,7 @@ def summarize(st, cfg: SwarmConfig, profile: TaskProfile) -> Dict:
         "transfers_delivered": st["tx_delivered"],
         "jain_fairness": jain,
         "energy_per_task_j": ae,
-        "energy_total_j": st["e_comp"] + st["e_tx"],
+        "energy_total_j": e_total,
         "throughput_tps": tps,
         "dropped": st["drop_count"],
         "fom": fom,
@@ -445,8 +455,7 @@ def summarize(st, cfg: SwarmConfig, profile: TaskProfile) -> Dict:
         out["trace_hops"] = st["trace_hops"]
         out["trace_hop_overflow"] = st["trace_hop_overflow"]
     if trace_record.state_enabled(cfg):
-        # the epoch-indexed flight recorder (decode_state/state_indices);
-        # state_e_tx is an internal accumulator, never emitted
+        # the epoch-indexed flight recorder (decode_state/state_indices)
         out["trace_state"] = st["trace_state"]
         out["trace_state_sys"] = st["trace_state_sys"]
         out["trace_state_epochs"] = st["trace_state_epochs"]

@@ -94,13 +94,10 @@ def progress(st, cap, alive, cfg: SwarmConfig, t_now):
             st["tx_active"] & (~live | pre_arrived)).astype(jnp.int32)
     st["tx_bits"] = jnp.where(flying, st["tx_bits"] - rate * tick,
                               st["tx_bits"])
-    st["e_tx"] = st["e_tx"] + jnp.sum(flying) * tx_w * tick
+    st["e_tx"] = st["e_tx"] + jnp.where(flying, tx_w * tick, 0.0)
     if "tx_energy" in st:    # attribute the airtime joules to the task
         st["tx_energy"] = st["tx_energy"] + jnp.where(flying,
                                                       tx_w * tick, 0.0)
-    if "state_e_tx" in st:   # flight recorder: per-sender split of e_tx
-        st["state_e_tx"] = st["state_e_tx"] + jnp.where(flying,
-                                                        tx_w * tick, 0.0)
     arrived = active & (st["tx_bits"] <= 0.0)
     # receiver contention: lowest-index origin wins per destination
     origin_rank = jnp.where(arrived, rows, INT_MAX)

@@ -37,10 +37,9 @@ belongs to epoch ``s * every``, so slot ``epoch // every`` is written
 exactly once, by exactly one epoch (non-sampled epochs target the
 out-of-bounds slot S and are dropped by the scatter mode).  There is no
 sequence counter, no overflow, and no ordering dependence — backend
-bit-parity is free.  One trace-only accumulator rides next to the
-buffers: ``state_e_tx`` [N], per-node cumulative transmit-airtime energy,
-accrued in ``transfer.progress`` exactly where the swarm-level ``e_tx``
-scalar accrues (it splits the scalar by sender; summarize never emits it).
+bit-parity is free.  The per-node transmit-energy gauge reads the
+simulator's own ``e_tx`` accumulator directly: energy accrues per sender
+(``transfer.progress``) and is only summed to swarm level in summarize.
 """
 from __future__ import annotations
 
@@ -126,8 +125,6 @@ def init_state_stream(cfg: SwarmConfig, n: int) -> dict:
         # epoch index of each written slot; -1 marks never-written (only
         # possible if the scan ends before the slot's epoch)
         "trace_state_epochs": jnp.full((S,), -1.0, jnp.float32),
-        # internal per-node tx-energy split of the e_tx scalar (not emitted)
-        "state_e_tx": jnp.zeros((n,), jnp.float32),
     }
 
 
@@ -149,7 +146,7 @@ def write_state(st, epoch_idx, t_end, cfg: SwarmConfig):
     inflight_bits = jnp.where(st["tx_active"],
                               jnp.maximum(st["tx_bits"], 0.0), 0.0)
     node_rows = jnp.stack(
-        [st["phi"][:M], qdepth[:M], e_comp[:M], st["state_e_tx"][:M],
+        [st["phi"][:M], qdepth[:M], e_comp[:M], st["e_tx"][:M],
          st["alive"][:M].astype(jnp.float32), inflight_bits[:M]], axis=-1)
 
     q = qdepth
@@ -162,7 +159,7 @@ def write_state(st, epoch_idx, t_end, cfg: SwarmConfig):
          st["gen_count"].astype(jnp.float32),
          jnp.mean(q), jnp.max(q), jain,
          jnp.mean(st["phi"]), jnp.min(st["phi"]), jnp.max(st["phi"]),
-         st["e_comp"] + st["e_tx"]]).astype(jnp.float32)
+         jnp.sum(st["e_comp"] + st["e_tx"])]).astype(jnp.float32)
 
     st = dict(st)
     st["trace_state"] = st["trace_state"].at[slot].set(

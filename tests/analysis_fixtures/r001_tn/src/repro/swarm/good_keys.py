@@ -1,0 +1,31 @@
+"""R001 true negatives: the idioms the rule must NOT flag."""
+import jax
+import jax.random as jr
+
+
+def split_per_sink(key):
+    k1, k2 = jax.random.split(key)
+    noise = jax.random.normal(k1, (4,))
+    coin = jax.random.bernoulli(k2, 0.5)
+    return noise, coin
+
+
+def branch_exclusive(key, flag):
+    # one consumption per execution: if/else arms are alternatives
+    if flag:
+        out = jax.random.normal(key, (2,))
+    else:
+        out = jax.random.uniform(key, (2,))
+    return out
+
+
+def rebind_chain(key):
+    # rebinding starts a fresh def: each def is consumed exactly once
+    key = jr.fold_in(key, 1)
+    return jr.normal(key)
+
+
+def closure_single_use(key):
+    def body(x):
+        return x + jax.random.normal(key)
+    return body(0.0)

@@ -1,0 +1,15 @@
+"""R001 true positive: one key feeds two independent sinks."""
+import jax
+
+
+def sample_pair(key):
+    noise = jax.random.normal(key, (4,))
+    coin = jax.random.bernoulli(key, 0.5)   # same key, second sink
+    return noise, coin
+
+
+def split_then_reuse(key):
+    k1, k2 = jax.random.split(key)
+    a = jax.random.normal(k1)
+    b = jax.random.uniform(k1)              # k1 consumed twice
+    return a + b + jax.random.normal(k2)

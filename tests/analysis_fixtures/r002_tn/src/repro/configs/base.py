@@ -1,0 +1,17 @@
+"""R002 true negative config: wholesale digest + exempted spec field."""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class SwarmConfig:
+    num_workers: int = 8
+    tick_s: float = 0.05
+    trace_capacity: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepSpec:
+    name: str = ""          # display label — exempted in the baseline
+    base: object = None
+    num_runs: int = 1
+    seed: int = 0

@@ -1,0 +1,16 @@
+"""Wholesale cfg digest: every SwarmConfig field covered by construction."""
+import dataclasses
+import hashlib
+import json
+
+
+def point_digest(point, code_version):
+    payload = {
+        "cfg": dataclasses.asdict(point.cfg),
+        "strategy": point.strategy,
+        "num_runs": point.num_runs,
+        "seed": point.seed,
+        "code": code_version,
+    }
+    blob = json.dumps(payload, sort_keys=True).encode()
+    return hashlib.sha256(blob).hexdigest()

@@ -1,0 +1,17 @@
+"""Explicit field enumeration that forgot ``trace_capacity``."""
+import hashlib
+import json
+
+
+def point_digest(point, code_version):
+    payload = {
+        "num_workers": point.cfg.num_workers,
+        "tick_s": point.cfg.tick_s,
+        "strategy": point.strategy,
+        "n": point.n,
+        "num_runs": point.num_runs,
+        "seed": point.seed,
+        "code": code_version,
+    }
+    blob = json.dumps(payload, sort_keys=True).encode()
+    return hashlib.sha256(blob).hexdigest()

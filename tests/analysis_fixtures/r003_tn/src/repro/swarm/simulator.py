@@ -1,0 +1,22 @@
+"""R003 true negative: pure scan; impure helper exists but is unreachable."""
+import time
+
+import jax.numpy as jnp
+
+
+def _step(x):
+    return x * jnp.float32(2.0)
+
+
+def _epoch(st, key, cfg):
+    return _step(st)
+
+
+def run_sim(key, cfg, strategy, n):
+    return _epoch(jnp.float32(1.0), key, cfg)
+
+
+def host_report(metrics):
+    # impure on purpose — but only ever called from the host side, never
+    # from the scan's call graph, so the rule must stay silent
+    print(metrics, time.time())

@@ -1,0 +1,16 @@
+"""R003 true positive: wall clock reachable from the jitted scan."""
+import time
+
+import jax.numpy as jnp
+
+
+def _stamp(x):
+    return x + time.time()      # host clock inside the traced region
+
+
+def _epoch(st, key, cfg):
+    return _stamp(st)
+
+
+def run_sim(key, cfg, strategy, n):
+    return _epoch(jnp.float32(0.0), key, cfg)

@@ -1,0 +1,16 @@
+"""Registry whose key is tested and documented (DESIGN.md §4)."""
+
+MOBILITY_MODELS = {}
+
+STRATEGY_NAMES = ("LocalOnly", "Distributed")
+
+
+def register_mobility(name, fn):
+    MOBILITY_MODELS[name] = fn
+
+
+def ghost_walk(key, cfg, n):
+    return None
+
+
+register_mobility("ghost_walk_model", ghost_walk)

@@ -1,0 +1,14 @@
+"""Registry with an undocumented key (cf. DESIGN.md §42)."""
+
+MOBILITY_MODELS = {}
+
+
+def register_mobility(name, fn):
+    MOBILITY_MODELS[name] = fn
+
+
+def ghost_walk(key, cfg, n):
+    return None
+
+
+register_mobility("ghost_walk_model", ghost_walk)

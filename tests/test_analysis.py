@@ -1,0 +1,222 @@
+"""swarmlint (repro.analysis): clean tree, per-rule fixtures, CLI contract.
+
+The fixture mini-repos under ``tests/analysis_fixtures/`` each carry one
+rule's defect (``*_tp``) or the closest correct idiom (``*_tn``); they go
+through :func:`repro.analysis.run` — the exact code path the CLI and the
+CI gate use — so a rule that silently stops firing fails here first.
+"""
+import ast
+import json
+import os
+import shutil
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import run
+from repro.analysis.baseline import parse_baseline
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+FIXTURES = os.path.join(REPO, "tests", "analysis_fixtures")
+
+
+def fixture(name):
+    return os.path.join(FIXTURES, name)
+
+
+def run_rule(root, rule):
+    return run(root, rules=[rule])
+
+
+# ---------------------------------------------------------------------------
+# the shipped tree is clean (tier-1 enforcement of the CI gate)
+# ---------------------------------------------------------------------------
+
+
+def test_repo_tree_is_clean():
+    """The committed tree must carry zero findings beyond the baseline —
+    the same assertion ``python -m repro.analysis`` makes in CI."""
+    findings = run(REPO)
+    assert findings == [], "\n".join(
+        f"{f.file}:{f.line}: {f.rule} [{f.symbol}] {f.message}"
+        for f in findings)
+
+
+def test_repo_baseline_entries_all_fire():
+    """Every [[allow]] entry must still match a live finding: an entry
+    whose finding is gone is dead weight that would mask a future
+    regression at the same (rule, file, symbol)."""
+    raw = run(REPO, use_baseline=False)
+    live = {(f.rule, f.file, f.symbol) for f in raw}
+    from repro.analysis.baseline import load_baseline
+    bl = load_baseline(REPO)
+    assert bl is not None
+    stale = [a for a in bl.allows_ if a not in live]
+    assert stale == [], f"baseline entries with no live finding: {stale}"
+
+
+# ---------------------------------------------------------------------------
+# R001 — key discipline
+# ---------------------------------------------------------------------------
+
+
+def test_r001_true_positive():
+    found = run_rule(fixture("r001_tp"), "R001")
+    symbols = {f.symbol for f in found}
+    assert "sample_pair:key" in symbols
+    assert "split_then_reuse:k1" in symbols
+    assert all(f.rule == "R001" for f in found)
+
+
+def test_r001_true_negative():
+    assert run_rule(fixture("r001_tn"), "R001") == []
+
+
+# ---------------------------------------------------------------------------
+# R002 — digest completeness
+# ---------------------------------------------------------------------------
+
+
+def test_r002_true_positive():
+    found = run_rule(fixture("r002_tp"), "R002")
+    assert [f.symbol for f in found] == ["SwarmConfig.trace_capacity"]
+    assert "point_digest" in found[0].message
+
+
+def test_r002_true_negative():
+    # wholesale asdict coverage + a justified SweepSpec.name exemption
+    assert run_rule(fixture("r002_tn"), "R002") == []
+
+
+def test_r002_new_field_without_coverage_fails(tmp_path):
+    """The satellite contract: adding a SwarmConfig field to a tree whose
+    digest enumerates fields explicitly must fail R002 until the field is
+    digested or exempted.  The tmp tree uses the *real* SwarmConfig plus a
+    generated explicit-enumeration ``point_digest`` so the test tracks the
+    live field list instead of a frozen copy."""
+    cfg_src = os.path.join(REPO, "src", "repro", "configs", "base.py")
+    cls = next(n for n in ast.parse(open(cfg_src).read()).body
+               if isinstance(n, ast.ClassDef) and n.name == "SwarmConfig")
+    fields = [st.target.id for st in cls.body
+              if isinstance(st, ast.AnnAssign)
+              and isinstance(st.target, ast.Name)]
+    assert len(fields) > 10     # sanity: we really parsed the dataclass
+
+    dst_cfg = tmp_path / "src" / "repro" / "configs"
+    dst_fleet = tmp_path / "src" / "repro" / "fleet"
+    dst_cfg.mkdir(parents=True)
+    dst_fleet.mkdir(parents=True)
+    shutil.copy(cfg_src, dst_cfg / "base.py")
+    lines = [f'        "{f}": point.cfg.{f},' for f in fields]
+    (dst_fleet / "store.py").write_text(
+        "import hashlib, json\n\n\n"
+        "def point_digest(point, code_version):\n"
+        "    payload = {\n" + "\n".join(lines) + "\n"
+        '        "code": code_version,\n'
+        "    }\n"
+        "    return hashlib.sha256(json.dumps(\n"
+        "        payload, sort_keys=True).encode()).hexdigest()\n")
+
+    assert run_rule(str(tmp_path), "R002") == []    # fully enumerated
+
+    with open(dst_cfg / "base.py", "a") as f:
+        f.write("    brand_new_knob: int = 0\n")
+    found = run_rule(str(tmp_path), "R002")
+    assert [f.symbol for f in found] == ["SwarmConfig.brand_new_knob"]
+
+
+# ---------------------------------------------------------------------------
+# R003 — in-scan purity
+# ---------------------------------------------------------------------------
+
+
+def test_r003_true_positive():
+    found = run_rule(fixture("r003_tp"), "R003")
+    assert [f.symbol for f in found] == ["_stamp"]
+    # the chain starts at whichever root reached it first (_epoch is a
+    # root in its own right) and must end at the offending function
+    assert "-> _stamp" in found[0].message
+    assert "time.time" in found[0].message
+
+
+def test_r003_true_negative():
+    # host_report calls print()/time.time() but is unreachable from run_sim
+    assert run_rule(fixture("r003_tn"), "R003") == []
+
+
+# ---------------------------------------------------------------------------
+# R004 — registry/doc consistency
+# ---------------------------------------------------------------------------
+
+
+def test_r004_true_positive():
+    found = run_rule(fixture("r004_tp"), "R004")
+    msgs = "\n".join(f.message for f in found)
+    assert "referenced by no test" in msgs
+    assert "not mentioned in DESIGN.md" in msgs
+    assert any(f.symbol == "cite:§42" for f in found)
+
+
+def test_r004_true_negative():
+    assert run_rule(fixture("r004_tn"), "R004") == []
+
+
+# ---------------------------------------------------------------------------
+# baseline parsing contract
+# ---------------------------------------------------------------------------
+
+
+def test_baseline_rejects_missing_reason():
+    with pytest.raises(ValueError, match="reason"):
+        parse_baseline('[[allow]]\nrule = "R001"\nfile = "f.py"\n'
+                       'symbol = "f:key"\nreason = ""\n')
+    with pytest.raises(ValueError, match="missing"):
+        parse_baseline('[[digest_exempt]]\nfield = "SweepSpec.name"\n')
+
+
+def test_baseline_matches_without_line_numbers():
+    from repro.analysis.astutil import Finding
+    bl = parse_baseline('[[allow]]\nrule = "R001"\nfile = "a.py"\n'
+                        'symbol = "f:key"\nreason = "why"\n')
+    assert bl.allows(Finding("R001", "a.py", 1, "f:key", "m"))
+    assert bl.allows(Finding("R001", "a.py", 999, "f:key", "m"))
+    assert not bl.allows(Finding("R003", "a.py", 1, "f:key", "m"))
+
+
+# ---------------------------------------------------------------------------
+# CLI contract: exit codes + JSON shape
+# ---------------------------------------------------------------------------
+
+
+def _cli(*argv):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *argv],
+        capture_output=True, text=True, env=env, cwd=REPO)
+
+
+def test_cli_clean_tree_exits_zero():
+    p = _cli("--root", REPO)
+    assert p.returncode == 0, p.stdout + p.stderr
+    assert "0 finding(s)" in p.stdout
+
+
+@pytest.mark.parametrize("fix,rule", [("r001_tp", "R001"),
+                                      ("r002_tp", "R002"),
+                                      ("r003_tp", "R003"),
+                                      ("r004_tp", "R004")])
+def test_cli_true_positive_exits_nonzero(fix, rule):
+    p = _cli("--root", fixture(fix), "--rules", rule, "--format", "json")
+    assert p.returncode == 1, p.stdout + p.stderr
+    doc = json.loads(p.stdout)
+    assert doc["rules"] == [rule]
+    assert doc["findings"], "expected at least one finding"
+    assert all(set(f) >= {"rule", "file", "line", "symbol", "message"}
+               for f in doc["findings"])
+
+
+def test_cli_unknown_rule_exits_two():
+    p = _cli("--rules", "R999")
+    assert p.returncode == 2

@@ -1,16 +1,14 @@
 """Unit + property tests for the paper's core protocol (Eqs. 9-16)."""
-import hypothesis
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 from hypothesis import given, settings
-from hypothesis.extra import numpy as hnp
 
 from repro.core import (CongestionState, congestion_update, decision_epoch,
                         exit_accuracy, exit_boundary_layers, exit_label,
-                        init_protocol, neighbor_mask, phi_bounds_ok,
-                        phi_fixpoint, phi_update, transfer_decision)
+                        init_protocol, phi_bounds_ok, phi_fixpoint,
+                        phi_update, transfer_decision)
 
 jax.config.update("jax_platform_name", "cpu")
 

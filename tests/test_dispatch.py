@@ -13,7 +13,6 @@ import json
 import os
 import time
 
-import numpy as np
 import pytest
 
 from repro.configs.base import SwarmConfig

@@ -199,12 +199,12 @@ def test_contended_delivery_energy_pins_to_single_transfer_value():
     st, cap, alive = _contention_state(cfg, bits=100.0, rate=100.0 / tick)
     st = transfer_mod.progress(st, cap, alive, cfg, tick)        # tick 1
     assert bool(st["tx_active"][1]) and not bool(st["tx_active"][0])
-    assert float(st["e_tx"]) == pytest.approx(2 * tx_w * tick)
+    assert float(jnp.sum(st["e_tx"])) == pytest.approx(2 * tx_w * tick)
     bits_frozen = float(st["tx_bits"][1])
     st = transfer_mod.progress(st, cap, alive, cfg, 2 * tick)    # tick 2
     assert not bool(st["tx_active"][1])                          # delivered
     # no further accrual for the waiting tick, bits frozen at arrival
-    assert float(st["e_tx"]) == pytest.approx(2 * tx_w * tick)
+    assert float(jnp.sum(st["e_tx"])) == pytest.approx(2 * tx_w * tick)
     assert float(st["tx_bits"][1]) == pytest.approx(bits_frozen)
     # per-task attribution matches: loser pays the same as the winner
     assert float(st["tx_energy"][0]) == pytest.approx(tx_w * tick)
@@ -256,13 +256,13 @@ def test_hop_energy_join_reproduces_e_tx():
     air = hop_airtime_s(hdec, tick)
     e = hop_energy_j(hdec, tick, cfg.tx_power_dbm)
     np.testing.assert_allclose(e, air * tx_w)
-    assert e.sum() == pytest.approx(float(st["e_tx"]))
+    assert e.sum() == pytest.approx(float(jnp.sum(st["e_tx"])))
     # the stall is excluded: the loser's wall clock exceeds its airtime
     assert np.any(air < hdec["transfer_time_s"])
     # per-link rollup is the same join, grouped by directed link
     le = link_energy_j(hdec, tick, cfg.tx_power_dbm)
     assert set(le) == {"0->2", "1->2"}
-    assert sum(le.values()) == pytest.approx(float(st["e_tx"]))
+    assert sum(le.values()) == pytest.approx(float(jnp.sum(st["e_tx"])))
 
 
 def test_hop_energy_in_report_and_schema(hopped):

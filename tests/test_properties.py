@@ -5,7 +5,6 @@ import jax.numpy as jnp
 import numpy as np
 from hypothesis import given, settings
 
-from repro.configs import get_config, reduced
 from repro.models.attention import chunked_attention
 from repro.models.common import rope_angles, apply_rope
 from repro.kernels import ref

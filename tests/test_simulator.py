@@ -118,3 +118,63 @@ def test_mobility_stays_on_circle():
     p2 = positions_at(mob, cfg, 12.345 + dt)
     v = jnp.linalg.norm(p2 - p1, axis=-1) / dt
     np.testing.assert_allclose(np.asarray(v), cfg.speed_mps, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# RNG stream pin (swarmlint R001 audit, DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+# Exact float32 goldens (hex, lossless) for the default scenario after the
+# init_state key fix: kf/km/k_fault now come from one split(key, 3) instead
+# of split(key) + fold_in(key, 7).  Any change to the key derivations in
+# init_state/_epoch — including "harmless" re-splits of the sites baselined
+# in analysis_baseline.toml — moves these streams and must be deliberate:
+# regenerate the table AND bump the result-store code version in the same
+# change, or cached sweep points will silently alias the old streams.
+_RNG_PIN = {
+    LOCAL_ONLY: {
+        "completed": "0x1.a820000000000p+11",
+        "generated": "0x1.d340000000000p+11",
+        "avg_latency_s": "0x1.1e0d940000000p+0",
+        "energy_total_j": "0x1.9790d00000000p+9",
+        "jain_fairness": "0x1.53a8000000000p-1",
+        "transfers_delivered": "0x0.0p+0",
+    },
+    GREEDY: {
+        "completed": "0x1.a860000000000p+11",
+        "generated": "0x1.d340000000000p+11",
+        "avg_latency_s": "0x1.1c29900000000p+0",
+        "energy_total_j": "0x1.9856320000000p+9",
+        "jain_fairness": "0x1.54d7600000000p-1",
+        "transfers_delivered": "0x1.3000000000000p+4",
+    },
+    DISTRIBUTED: {
+        "completed": "0x1.b500000000000p+11",
+        "generated": "0x1.d340000000000p+11",
+        "avg_latency_s": "0x1.003da40000000p+0",
+        "energy_total_j": "0x1.b594980000000p+9",
+        "jain_fairness": "0x1.5e2bf20000000p-1",
+        "transfers_delivered": "0x1.1200000000000p+9",
+    },
+}
+
+
+@pytest.mark.parametrize("strategy", sorted(_RNG_PIN))
+def test_default_scenario_rng_pin(strategy):
+    """Bit-identity golden for the default scenario's RNG streams.
+
+    Referenced by analysis_baseline.toml and DESIGN.md §13.2: the R001
+    baseline entries assert their key derivations are *deliberate*; this
+    test is what makes that assertion checkable.  A failure here means a
+    key derivation (or any traced arithmetic) changed the simulated
+    numbers — never "fix" it by regenerating the goldens without also
+    retiring the cached store entries (REPRO_CODE_VERSION / code bump).
+    """
+    from repro.swarm.simulator import run_sim
+    m = jax.jit(lambda k: run_sim(k, CFG, jnp.int32(strategy),
+                                  CFG.num_workers))(KEY)
+    for k, hexval in _RNG_PIN[strategy].items():
+        got = float(np.asarray(m[k]))
+        assert got.hex() == hexval, (
+            f"{k}: {got.hex()} != pinned {hexval} — RNG stream or traced "
+            f"arithmetic moved (see DESIGN.md §13.2 before regenerating)")

@@ -2,7 +2,6 @@
 φ-planner must respect legal split points, and the serve engine must
 early-exit under congestion."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

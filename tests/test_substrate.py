@@ -1,6 +1,4 @@
 """Optimizer, data pipeline, checkpoint, compression, fault driver."""
-import os
-import shutil
 
 import jax
 import jax.numpy as jnp

@@ -41,8 +41,10 @@ aggregate indices into ``artifacts/BENCH_fleet.json``.  Env knobs:
   REPRO_FULL_RUNS=1         the paper's 50 Monte-Carlo runs (default 16)
 
 Every ``fleet_sweep`` additionally records each point's compile/execute
-wall-clock spans into the ``profile`` section of BENCH_fleet.json
-(``benchmarks/perf_gate.py`` gates CI on the execute spans).
+wall-clock spans into the ``profile`` section of BENCH_fleet.json, each
+entry tagged with its ``host_class`` (``repro.obs.host_class``) so
+``benchmarks/perf_gate.py`` only hard-fails same-class comparisons and
+downgrades cross-class excesses to warnings (DESIGN.md §14.5).
 
 Multi-host mode: with the ``REPRO_FLEET_*`` rank/world env contract set
 (``fleet/dispatch.py``), every figure sweep runs as this rank's worker
@@ -162,7 +164,10 @@ def fleet_sweep(spec: SweepSpec, backend: Optional[str] = None,
                          tick_s={pt.label: pt.cfg.tick_s
                                  for pt in spec.expand()},
                          tx_power_dbm={pt.label: pt.cfg.tx_power_dbm
-                                       for pt in spec.expand()}))
+                                       for pt in spec.expand()},
+                         # per-point config → latency_segments critical-
+                         # path attribution on traced points (§14.4)
+                         cfg={pt.label: pt.cfg for pt in spec.expand()}))
         payload = _profile_payload(spec, res, backend)
         if payload:
             # merge per sweep name: profile is the one BENCH section with
@@ -188,14 +193,16 @@ def _profile_payload(spec: SweepSpec, res: Dict[str, Dict],
     and the perf gate skips it.
     """
     from repro.fleet.dispatch import read_progress
+    from repro.obs import host_class
 
     prog: Dict[str, Dict] = {}
     for row in read_progress(PROGRESS_JSONL):
         if row.get("event") == "point" and row.get("label"):
             prog[row["label"]] = row
     payload = {}
+    hc = host_class()
     for label, m in res.items():
-        entry = {"backend": backend, "cached": True,
+        entry = {"backend": backend, "cached": True, "host_class": hc,
                  "wall_s": None, "compile_s": None, "execute_s": None}
         if m.get("_execute_s") is not None:
             entry.update(cached=False,

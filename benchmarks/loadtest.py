@@ -1,0 +1,226 @@
+"""Open-loop SLO load test for the serve path (DESIGN.md §14.2-§14.3).
+
+Drives the scheduling-faithful :class:`repro.obs.loadgen.
+SyntheticServeEngine` with Poisson / MMPP / trace-replay arrivals at a
+ladder of rate multipliers around the engine's capacity
+(``max_batch / dt`` rows/s — one batch per stage per epoch), producing a
+throughput-vs-latency **knee sweep**: per point p50/p99/p999 latency,
+goodput, time-to-first-exit, drop rate, queue-saturation gauges and the
+compute/queue-wait segment split, merged into ``BENCH_fleet.json`` under
+``slo_serve`` and exported as Prometheus exposition text plus Perfetto
+counter tracks.  Progress rows stream to the shared ``progress.jsonl``,
+so ``benchmarks/run.py --watch`` renders the run live.
+
+A million requests complete on CPU in well under a minute: the synthetic
+engine runs the real scheduler (queues, epoch snapshot, congestion EMA,
+exit ladder, admission control) with identity stage math and empty
+payloads, and arrivals coalesce onto the epoch grid in ≤ ``max_batch``
+row batches stamped with their first row's true arrival time.
+
+Examples::
+
+    python benchmarks/loadtest.py --requests 1000000
+    python benchmarks/loadtest.py --requests 50000 --processes poisson
+    python benchmarks/loadtest.py --replay times.json --processes replay
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir, "src"))
+
+import numpy as np  # noqa: E402
+
+DEFAULT_KNEE = (0.5, 0.8, 0.95, 1.1, 1.4)
+GAUGE_EVERY_EPOCHS = 512     # progress-row cadence inside a point
+
+
+def _arrivals(process: str, rate: float, horizon: float, seed: int,
+              replay_path):
+    from repro.obs import loadgen
+    if process == "poisson":
+        return loadgen.poisson_arrivals(rate, horizon, seed=seed)
+    if process == "mmpp":
+        # dwell-weighted mean equals the target: 6 s low at 0.8·rate,
+        # 2 s high at 1.6·rate → (6·0.8 + 2·1.6)/8 = 1.0·rate
+        return loadgen.mmpp_arrivals(0.8 * rate, 1.6 * rate, horizon,
+                                     mean_lo_s=6.0, mean_hi_s=2.0,
+                                     seed=seed)
+    if process == "replay":
+        if not replay_path:
+            raise SystemExit("--processes replay requires --replay PATH")
+        with open(replay_path) as f:
+            return loadgen.replay_arrivals(json.load(f))
+    raise SystemExit(f"unknown arrival process {process!r}")
+
+
+def run_point(process: str, mult: float, args, progress=None,
+              label: str = ""):
+    """One knee point: generate arrivals, run the open loop, report."""
+    from repro.obs.loadgen import SyntheticServeEngine, run_open_loop
+    from repro.obs.slo import slo_indices
+
+    capacity = args.max_batch / args.dt
+    rate = mult * capacity
+    horizon = args.requests / rate
+    seed = args.seed + int(round(1000 * mult))
+    times = _arrivals(process, rate, horizon, seed, args.replay)
+    if process == "replay" and times.size:
+        # the trace sets the offered rate; the multiplier is nominal
+        horizon = max(float(times[-1]), args.dt)
+        rate = times.size / horizon
+    epochs_est = max(int(horizon / args.dt), 1)
+    state_every = max(1, epochs_est // 2048)
+    eng = SyntheticServeEngine(
+        n_stages=args.stages, max_queue=args.max_queue,
+        state_every=state_every, max_records=args.max_records)
+
+    def on_epoch(epoch, t, engine):
+        if progress is None or epoch % GAUGE_EVERY_EPOCHS:
+            return
+        st = engine.stats
+        lq = st.latency_quantiles()
+        progress.emit(
+            event="gauges", label=label, sim_t=round(t, 3),
+            queue_depth_mean=round(float(np.mean(
+                [len(q) for q in engine.queues])), 3),
+            queue_depth_max=int(max(len(q) for q in engine.queues)),
+            completion_rate=round(
+                st.completed / max(st.generated_rows, 1), 4),
+            p50_latency_s=lq["p50"], p99_latency_s=lq["p99"],
+            goodput_rps=round(st.completed / t, 1) if t > 0 else 0.0,
+            drop_rate=round(st.dropped / max(st.generated_rows, 1), 4),
+            t=time.time())
+
+    stats = run_open_loop(eng, times, dt=args.dt, max_batch=args.max_batch,
+                          on_epoch=on_epoch if progress else None)
+    point = slo_indices(stats, horizon_s=float(eng.clock),
+                        offered_rows=int(times.size), rate_rps=rate,
+                        max_queue=args.max_queue)
+    point["rate_multiplier"] = mult
+    return point, stats
+
+
+def main(argv=None) -> None:
+    from benchmarks.common import ART, BENCH_JSON, PROGRESS_JSONL
+    from repro.fleet import write_bench_json
+    from repro.fleet.dispatch import ProgressWriter
+    from repro.obs import Registry, host_class
+    from repro.obs.prom import parse, render
+    from repro.obs.slo import fill_registry, perfetto_counter_events
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--requests", type=int, default=200_000,
+                    help="rows offered per knee point (default 200000)")
+    ap.add_argument("--processes", default="poisson,mmpp",
+                    help="comma list of poisson,mmpp,replay")
+    ap.add_argument("--replay", default=None, metavar="PATH",
+                    help="JSON array of arrival times (seconds) for the "
+                         "replay process")
+    ap.add_argument("--knee", default=",".join(map(str, DEFAULT_KNEE)),
+                    help="rate multipliers of capacity (max_batch/dt)")
+    ap.add_argument("--dt", type=float, default=0.01,
+                    help="epoch length, seconds (default 0.01)")
+    ap.add_argument("--max-batch", type=int, default=64,
+                    help="rows per submitted batch (default 64)")
+    ap.add_argument("--stages", type=int, default=4)
+    ap.add_argument("--max-queue", type=int, default=512,
+                    help="admission-control bound on the entry queue, in "
+                         "batches (0 = unbounded)")
+    ap.add_argument("--max-records", type=int, default=100_000,
+                    help="TaskRecord rows kept per point (counters and "
+                         "histograms keep counting past this)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--bench", default=BENCH_JSON)
+    ap.add_argument("--prom", default=os.path.join(ART, "slo_serve.prom"))
+    ap.add_argument("--perfetto",
+                    default=os.path.join(ART, "slo_serve_trace.json"))
+    ap.add_argument("--no-artifacts", action="store_true",
+                    help="skip BENCH/prom/perfetto writes (smoke runs)")
+    args = ap.parse_args(argv)
+    if args.max_queue == 0:
+        args.max_queue = None
+
+    processes = [p for p in args.processes.split(",") if p]
+    multipliers = [float(m) for m in args.knee.split(",") if m]
+    capacity = args.max_batch / args.dt
+    progress = ProgressWriter(PROGRESS_JSONL)
+    progress.emit(event="sweep_start", sweep="slo_loadtest",
+                  total=len(processes) * len(multipliers), t=time.time())
+
+    reg = Registry()
+    payload = {
+        "meta": {
+            "host_class": host_class(), "dt_s": args.dt,
+            "max_batch_rows": args.max_batch, "stages": args.stages,
+            "capacity_rps": capacity, "requests_per_point": args.requests,
+            "max_queue": args.max_queue, "seed": args.seed,
+            "knee_multipliers": multipliers,
+            "mmpp": {"rate_lo": 0.8, "rate_hi": 1.6,
+                     "mean_lo_s": 6.0, "mean_hi_s": 2.0},
+        },
+        "processes": {},
+    }
+    t_start = time.perf_counter()
+    for process in processes:
+        points = {}
+        knee = []
+        ref_stats, ref_mult = None, None
+        for mult in multipliers:
+            label = f"{process}:x{mult:g}"
+            t0 = time.perf_counter()
+            point, stats = run_point(process, mult, args,
+                                     progress=progress, label=label)
+            wall = time.perf_counter() - t0
+            points[f"x{mult:g}"] = point
+            lq = point["latency_s"]
+            knee.append({
+                "rate_multiplier": mult,
+                "offered_rate_rps": point["offered_rate_rps"],
+                "goodput_rps": round(point["goodput_rps"], 1),
+                "p50_s": lq["p50"], "p99_s": lq["p99"],
+                "p999_s": lq["p999"], "drop_rate": point["drop_rate"],
+            })
+            progress.emit(event="point", label=label, digest=None,
+                          num_runs=1, wall_s=round(wall, 3), cached=False,
+                          t=time.time())
+            print(f"[loadtest] {label:>16}  offered {point['offered_rows']}"
+                  f" rows @ {point['offered_rate_rps']:.0f} rps"
+                  f" · goodput {point['goodput_rps']:.0f} rps"
+                  f" · p50 {lq['p50']} p99 {lq['p99']} p999 {lq['p999']}"
+                  f" · drop {point['drop_rate']:.3f}"
+                  f" · {wall:.2f}s wall", flush=True)
+            # Prometheus/Perfetto exports use the highest stable point
+            # (largest multiplier below capacity; else the first point)
+            if mult < 1.0 and (ref_mult is None or mult > ref_mult):
+                ref_stats, ref_mult = stats, mult
+        if ref_stats is None:
+            ref_stats = stats
+        payload["processes"][process] = {"points": points, "knee": knee}
+        fill_registry(reg, ref_stats, process=process)
+
+    if not args.no_artifacts:
+        write_bench_json(args.bench, "slo_serve", payload)
+        print(f"[loadtest] wrote slo_serve section -> {args.bench}")
+        text = render(reg)
+        parse(text)          # round-trip validity before writing
+        os.makedirs(os.path.dirname(args.prom) or ".", exist_ok=True)
+        with open(args.prom, "w") as f:
+            f.write(text)
+        print(f"[loadtest] wrote Prometheus exposition -> {args.prom}")
+        events = perfetto_counter_events(ref_stats)
+        with open(args.perfetto, "w") as f:
+            json.dump({"traceEvents": events, "displayTimeUnit": "ms"}, f)
+        print(f"[loadtest] wrote Perfetto counters -> {args.perfetto}")
+    total = time.perf_counter() - t_start
+    print(f"[loadtest] {len(processes) * len(multipliers)} points · "
+          f"{args.requests} rows/point · {total:.1f}s total")
+
+
+if __name__ == "__main__":
+    main()

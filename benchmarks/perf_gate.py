@@ -14,15 +14,29 @@ Comparisons are deliberately conservative to survive noisy CI hosts:
     skipped, not failed;
   * baselines below ``--min-seconds`` are skipped — ratios over
     millisecond-scale spans are dominated by scheduler jitter;
+  * profile entries carry a ``host_class`` tag (``repro.obs.host_class``:
+    OS/ISA/core-count, override ``REPRO_HOST_CLASS``); a regression
+    measured on a *different* host class than the baseline's is reported
+    as a warning, never a hard failure — only same-class (or untagged,
+    treated as same-class) comparisons gate (DESIGN.md §14.5);
+  * ``--rel-tol`` (env ``REPRO_PERF_REL_TOL``) adds slack to the ratio
+    threshold for known-noisy fleets: fail only past
+    ``max_ratio + rel_tol``;
   * a missing/empty baseline profile passes with a note, so the gate can
     land before the first baseline is committed.
+
+When a point fails, the gate also looks up the point's
+``latency_segments`` (critical-path attribution, ``trace/critical.py``)
+in both files' sweep sections and names the segment whose quantile moved
+the most — a regression report says *queue-wait regressed*, not just
+"slower" (DESIGN.md §14.5).
 
 Usage::
 
     python benchmarks/perf_gate.py \
         --baseline /tmp/bench_baseline.json \
         --current benchmarks/artifacts/BENCH_fleet.json \
-        --max-ratio 2.0
+        --max-ratio 2.0 [--rel-tol 0.25]
 """
 from __future__ import annotations
 
@@ -31,17 +45,30 @@ import json
 import os
 import sys
 
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir,
+                                "src"))
 
-def load_profile(path: str) -> dict:
+
+def load_bench(path: str) -> dict:
     if not os.path.exists(path):
         return {}
     with open(path) as f:
-        return json.load(f).get("profile", {})
+        return json.load(f)
+
+
+def load_profile(path: str) -> dict:
+    return load_bench(path).get("profile", {})
 
 
 def compare(baseline: dict, current: dict, max_ratio: float,
-            min_seconds: float):
-    """(checked, skipped, failures) over matching sweep/point entries."""
+            min_seconds: float, rel_tol: float = 0.0):
+    """(checked, skipped, failures) over matching sweep/point entries.
+
+    Entries whose ``host_class`` tags disagree never fail — an excess
+    ratio lands in ``skipped`` with a cross-class warning.  Untagged
+    entries (pre-tag baselines) gate as same-class.
+    """
+    threshold = max_ratio + rel_tol
     checked, skipped, failures = [], [], []
     for sweep, base_pts in baseline.items():
         cur_pts = current.get(sweep, {})
@@ -62,9 +89,34 @@ def compare(baseline: dict, current: dict, max_ratio: float,
                 continue
             ratio = ce / be
             checked.append((name, be, ce, ratio))
-            if ratio > max_ratio:
-                failures.append((name, be, ce, ratio))
+            if ratio > threshold:
+                bh, ch = b.get("host_class"), c.get("host_class")
+                if bh is not None and ch is not None and bh != ch:
+                    skipped.append(
+                        (name, f"execute x{ratio:.2f} exceeds gate but "
+                               f"host classes differ ({bh} vs {ch}) — "
+                               "warn only"))
+                else:
+                    failures.append((name, be, ce, ratio))
     return checked, skipped, failures
+
+
+def _point_sections(doc: dict, sweep: str, label: str) -> dict:
+    return (doc.get(f"sweep:{sweep}", {}).get("points", {})
+            .get(label, {}))
+
+
+def attribute_failure(base_doc: dict, cur_doc: dict, sweep: str,
+                      label: str, quantile: str = "p50"):
+    """Name the latency segment that moved for one failing point, from
+    the ``latency_segments`` payloads both BENCH files carry when the
+    sweep ran traced; ``None`` when either side lacks them."""
+    bseg = _point_sections(base_doc, sweep, label).get("latency_segments")
+    cseg = _point_sections(cur_doc, sweep, label).get("latency_segments")
+    if not bseg or not cseg:
+        return None
+    from repro.trace.critical import attribute
+    return attribute(bseg, cseg, quantile)
 
 
 def main(argv=None) -> int:
@@ -79,16 +131,24 @@ def main(argv=None) -> int:
     ap.add_argument("--min-seconds", type=float, default=0.2,
                     help="skip baselines shorter than this (default 0.2s "
                          "— sub-200ms ratios are scheduler noise)")
+    ap.add_argument("--rel-tol", type=float,
+                    default=float(os.environ.get("REPRO_PERF_REL_TOL",
+                                                 "0.0")),
+                    help="extra slack added to --max-ratio (env "
+                         "REPRO_PERF_REL_TOL; default 0)")
     args = ap.parse_args(argv)
 
-    baseline = load_profile(args.baseline)
-    current = load_profile(args.current)
+    base_doc = load_bench(args.baseline)
+    cur_doc = load_bench(args.current)
+    baseline = base_doc.get("profile", {})
+    current = cur_doc.get("profile", {})
     if not baseline:
         print(f"perf_gate: no profile section in {args.baseline} — "
               "nothing to gate (pass)")
         return 0
     checked, skipped, failures = compare(baseline, current,
-                                         args.max_ratio, args.min_seconds)
+                                         args.max_ratio, args.min_seconds,
+                                         args.rel_tol)
     for name, be, ce, ratio in checked:
         print(f"perf_gate: {name} execute {be:.3f}s -> {ce:.3f}s "
               f"(x{ratio:.2f})")
@@ -97,10 +157,25 @@ def main(argv=None) -> int:
     if failures:
         for name, be, ce, ratio in failures:
             print(f"perf_gate: FAIL {name} execute {be:.3f}s -> {ce:.3f}s "
-                  f"(x{ratio:.2f} > x{args.max_ratio})", file=sys.stderr)
+                  f"(x{ratio:.2f} > x{args.max_ratio + args.rel_tol})",
+                  file=sys.stderr)
+            sweep, _, label = name.partition("/")
+            attr = attribute_failure(base_doc, cur_doc, sweep, label)
+            if attr is not None:
+                r = ("" if attr["ratio"] is None
+                     else f" (x{attr['ratio']:.2f})")
+                print(f"perf_gate:   segment attribution: "
+                      f"{attr['segment']} p50 {attr['baseline_s']:.4f}s "
+                      f"-> {attr['current_s']:.4f}s"
+                      f"{r} moved the most", file=sys.stderr)
+            else:
+                print("perf_gate:   segment attribution unavailable "
+                      "(run sweeps with --trace to record "
+                      "latency_segments)", file=sys.stderr)
         return 1
     print(f"perf_gate: ok ({len(checked)} checked, {len(skipped)} skipped, "
-          f"max ratio x{args.max_ratio})")
+          f"max ratio x{args.max_ratio}"
+          + (f" + rel tol {args.rel_tol}" if args.rel_tol else "") + ")")
     return 0
 
 

@@ -38,6 +38,9 @@ Flags:
                 the live swarm gauges (mean/max queue depth, φ spread,
                 completion rate) for the sweep currently running —
                 locally or on any host sharing the progress file.
+                ``benchmarks/loadtest.py`` (the open-loop SLO knee sweep,
+                DESIGN.md §14) streams its gauges — p50/p99 latency,
+                goodput, drop rate — onto the same surface.
 """
 from __future__ import annotations
 

@@ -35,7 +35,9 @@ running anywhere on the fleet.  Points computed under the state stream
 (``trace_state_every > 0``) additionally append live swarm-health rows —
 ``event: "gauges"`` per completed point and ``event: "chunk"`` per
 completed streaming chunk, both carrying the flight recorder's final
-system gauges (mean/max queue depth, φ spread, completion rate) — and
+system gauges (mean/max queue depth, φ spread, completion rate;
+``benchmarks/loadtest.py`` streams its SLO gauges — p50/p99 latency,
+goodput, drop rate — onto the same rows, DESIGN.md §14.3) — and
 computed point rows carry the executor's ``compile_s`` / ``execute_s``
 spans, which ``benchmarks/common.fleet_sweep`` folds into the BENCH
 ``profile`` section.
@@ -194,7 +196,10 @@ def progress_summary(rows: List[Dict]) -> Optional[Dict]:
         if "queue_depth_mean" in r:
             gauges = {k: r[k] for k in
                       ("queue_depth_mean", "queue_depth_max", "phi_spread",
-                       "completion_rate", "sim_t") if k in r}
+                       "completion_rate", "sim_t",
+                       # SLO gauges emitted by benchmarks/loadtest.py
+                       "p50_latency_s", "p99_latency_s", "goodput_rps",
+                       "drop_rate") if k in r}
     return {"sweep": start.get("sweep", "?"), "completed": completed,
             "total": total, "points_per_min": rate, "eta_s": eta,
             "gauges": gauges}
@@ -211,9 +216,17 @@ def render_progress(summary: Optional[Dict]) -> str:
     g = summary.get("gauges")
     if g:
         line += (f" · q̄ {g.get('queue_depth_mean', 0):.1f}"
-                 f"/max {g.get('queue_depth_max', 0):.0f}"
-                 f" · φΔ {g.get('phi_spread', 0):.2f}"
-                 f" · done {100.0 * g.get('completion_rate', 0):.0f}%")
+                 f"/max {g.get('queue_depth_max', 0):.0f}")
+        if "phi_spread" in g:
+            line += f" · φΔ {g['phi_spread']:.2f}"
+        line += f" · done {100.0 * g.get('completion_rate', 0):.0f}%"
+        if g.get("p99_latency_s") is not None:
+            line += (f" · p50/p99 {(g.get('p50_latency_s') or 0):.3f}/"
+                     f"{g['p99_latency_s']:.3f}s")
+        if "goodput_rps" in g:
+            line += f" · {g['goodput_rps']:.0f} rps"
+        if g.get("drop_rate"):
+            line += f" · drop {100.0 * g['drop_rate']:.1f}%"
     return line
 
 

@@ -40,7 +40,8 @@ def latency_cdf(lat_s, qs: Sequence[float] = LATENCY_QS) -> Dict[str, float]:
 def point_indices(metrics: Mapping[str, np.ndarray],
                   per_task_latency_s=None,
                   tick_s: Optional[float] = None,
-                  tx_power_dbm: Optional[float] = None) -> Dict:
+                  tx_power_dbm: Optional[float] = None,
+                  cfg=None) -> Dict:
     """Paper performance indices for one sweep point's per-run metrics.
 
     ``metrics["avg_latency_s"]`` holds one *mean* latency per Monte-Carlo
@@ -56,6 +57,13 @@ def point_indices(metrics: Mapping[str, np.ndarray],
     in-flight decomposition — ``tick_s`` converts stall ticks to wall
     time — and, with ``tx_power_dbm``, the airtime-J energy attribution
     per hop and per link; see ``repro.trace.aggregate.hop_indices``).
+
+    ``cfg`` (the point's ``SwarmConfig``) additionally enables the
+    critical-path attribution of a traced point: ``latency_segments`` —
+    per-task compute / queue-wait / airtime / stall quantiles and shares
+    whose per-task sums reconcile exactly with ``latency_s``
+    (``repro.trace.critical``, DESIGN.md §14.4; the compute rate estimate
+    is ``task_gflops_total / task_layers`` over ``capability_mean``).
     """
     out = {}
     for k, v in metrics.items():
@@ -66,17 +74,28 @@ def point_indices(metrics: Mapping[str, np.ndarray],
     if "avg_latency_s" in metrics:
         out["run_mean_latency_quantiles_s"] = latency_cdf(
             metrics["avg_latency_s"])
+    dec = hdec = None
     if "trace_records" in metrics:
         # per-task telemetry captured in-scan (repro.trace): the true
         # task-level indices, pooled over the point's Monte-Carlo runs
         from repro.trace import decode, trace_indices
-        out.update(trace_indices(decode(
-            metrics["trace_records"], metrics.get("trace_overflow"))))
+        dec = decode(metrics["trace_records"],
+                     metrics.get("trace_overflow"))
+        out.update(trace_indices(dec))
     if "trace_hops" in metrics:
         from repro.trace import decode_hops, hop_indices
-        out.update(hop_indices(decode_hops(
-            metrics["trace_hops"], metrics.get("trace_hop_overflow")),
-            tick_s=tick_s, tx_power_dbm=tx_power_dbm))
+        hdec = decode_hops(metrics["trace_hops"],
+                           metrics.get("trace_hop_overflow"))
+        out.update(hop_indices(hdec, tick_s=tick_s,
+                               tx_power_dbm=tx_power_dbm))
+    if dec is not None and cfg is not None:
+        from repro.trace.critical import segment_indices
+        layers = max(int(getattr(cfg, "task_layers", 0)), 1)
+        out["latency_segments"] = segment_indices(
+            dec, hdec, tick_s=tick_s,
+            gflops_per_layer=float(
+                getattr(cfg, "task_gflops_total", 0.0)) / layers,
+            capability_gflops=getattr(cfg, "capability_mean", None))
     if "trace_state" in metrics or "trace_state_sys" in metrics:
         # the flight recorder (trace_state_every > 0): φ-convergence,
         # queue-depth heatmap, energy-drain and imbalance indices
@@ -96,7 +115,7 @@ def point_indices(metrics: Mapping[str, np.ndarray],
 def build_report(results: Mapping[str, Mapping[str, np.ndarray]],
                  meta: Optional[Dict] = None,
                  per_task_latency_s: Optional[Mapping] = None,
-                 tick_s=None, tx_power_dbm=None) -> Dict:
+                 tick_s=None, tx_power_dbm=None, cfg=None) -> Dict:
     """``{point label: metrics}`` (executor output) → JSON-ready section.
 
     ``per_task_latency_s`` optionally maps point labels to pooled per-task
@@ -105,8 +124,11 @@ def build_report(results: Mapping[str, Mapping[str, np.ndarray]],
     queue-wait/in-flight wall-time decomposition and ``tx_power_dbm`` its
     airtime-J energy attribution: each is either one float for the whole
     sweep or a ``{point label: value}`` mapping (both are ordinary config
-    fields, so a sweep axis may vary them per point).  Output is
-    deterministic in the inputs either way.
+    fields, so a sweep axis may vary them per point).  ``cfg`` — one
+    ``SwarmConfig`` or a ``{point label: SwarmConfig}`` mapping — enables
+    the per-point ``latency_segments`` critical-path attribution of
+    traced points (DESIGN.md §14.4).  Output is deterministic in the
+    inputs either way.
     """
     lat = per_task_latency_s or {}
 
@@ -116,11 +138,14 @@ def build_report(results: Mapping[str, Mapping[str, np.ndarray]],
 
     tick = per_label(tick_s)
     txp = per_label(tx_power_dbm)
+    cfgs = (cfg if isinstance(cfg, Mapping) or cfg is None
+            else {label: cfg for label in results})
     return {
         "meta": dict(meta or {}),
         "points": {label: point_indices(
             m, lat.get(label), tick_s=(tick or {}).get(label),
-            tx_power_dbm=(txp or {}).get(label))
+            tx_power_dbm=(txp or {}).get(label),
+            cfg=(cfgs or {}).get(label))
             for label, m in results.items()},
     }
 

@@ -27,8 +27,10 @@ from repro.core.early_exit import (CongestionState, congestion_update,
                                    exit_label)
 from repro.models.common import slice_layers
 from repro.models.transformer import embed_in, head_out, run_layers
+from repro.obs import hist as obs_hist
 from repro.splitcompute.partitioner import StagePlan
 from repro.trace import schema
+from repro.trace.critical import SEGMENTS
 
 
 class ServeStats:
@@ -41,9 +43,16 @@ class ServeStats:
     ``t_now``), never from wall time; the historical counter surface
     (``completed`` / ``latency_sum`` / ``exit_counts`` / ``avg_latency``)
     is derived from the records.
+
+    Streaming SLO surface (DESIGN.md §14.1): every ``record()`` also fills
+    a log-bucketed latency histogram plus per-segment histograms
+    (compute / queue-wait / airtime / stall), so p50/p99/p999 stay O(1)
+    in memory however many requests flow through — the record rows can be
+    bounded (``max_records``) without losing the quantile story.
     """
 
-    def __init__(self, max_records: Optional[int] = None):
+    def __init__(self, max_records: Optional[int] = None,
+                 latency_hist: Optional[obs_hist.HistSpec] = None):
         # counters are maintained incrementally (O(1) access however long
         # the serve loop runs); the rows are the exportable telemetry and
         # can be bounded like the sim side's trace_capacity — beyond
@@ -61,6 +70,20 @@ class ServeStats:
         self._stage_rows: List[np.ndarray] = []
         self._dropped = 0
         self._generated = 0
+        self._generated_rows = 0
+        # streaming histograms: end-to-end latency + the critical-path
+        # segment decomposition (same spec everywhere ⇒ mergeable)
+        self.hist_spec = latency_hist or obs_hist.DEFAULT_LATENCY_HIST
+        self.latency_counts = obs_hist.empty_np(self.hist_spec)
+        self.segment_counts: Dict[str, np.ndarray] = {
+            s: obs_hist.empty_np(self.hist_spec) for s in SEGMENTS}
+        # exact per-segment second totals: latency_sum == Σ segment_sums
+        # whenever every record carried service_s (the reconciliation
+        # invariant slo_indices reports)
+        self.segment_sums: Dict[str, float] = {s: 0.0 for s in SEGMENTS}
+        # deterministic time-to-first-exit anchors (caller clock domain)
+        self.first_submit_t: Optional[float] = None
+        self.first_exit_t: Optional[float] = None
 
     def record_state(self, *, t, queue_depths, in_flight=None,
                      completed=None, dropped=None, generated=None,
@@ -109,11 +132,41 @@ class ServeStats:
             return np.zeros((0, 0, schema.NUM_STATE_GAUGES), np.float64)
         return np.stack(self._stage_rows)
 
+    def note_submit(self, t: float, rows: int = 1) -> None:
+        """Stamp an admission: first-submit anchor + row-level counter
+        (``_generated`` keeps its historical submit-count semantics)."""
+        if self.first_submit_t is None:
+            self.first_submit_t = float(t)
+        self._generated_rows += rows
+
     def record(self, *, seq, src, dst, created_t, completed_t, exit_label,
-               layers, hops, count=1) -> None:
-        """Append ``count`` identical sample records (one per batch row)."""
+               layers, hops, count=1, service_s=None) -> None:
+        """Append ``count`` identical sample records (one per batch row).
+
+        ``service_s`` is the caller's estimate of pure execution time for
+        the request (stages run × epoch dt on the serve path); clamped to
+        the recorded latency it becomes the compute segment, the rest
+        queue-wait — the serve side of the DESIGN.md §14.4 decomposition
+        (no radio ⇒ airtime/stall stay zero).
+        """
         self._completed += count
-        self._latency_sum += float(completed_t - created_t) * count
+        lat = float(completed_t - created_t)
+        self._latency_sum += lat * count
+        if self.first_exit_t is None:
+            self.first_exit_t = float(completed_t)
+        obs_hist.fill_np(self.hist_spec, self.latency_counts, [lat],
+                         [count])
+        if service_s is not None:
+            comp = min(float(service_s), max(lat, 0.0))
+            wait = max(lat, 0.0) - comp
+            obs_hist.fill_np(self.hist_spec,
+                             self.segment_counts["compute_s"],
+                             [comp], [count])
+            obs_hist.fill_np(self.hist_spec,
+                             self.segment_counts["queue_wait_s"],
+                             [wait], [count])
+            self.segment_sums["compute_s"] += comp * count
+            self.segment_sums["queue_wait_s"] += wait * count
         lbl = int(exit_label)
         self._exit_counts[lbl] = self._exit_counts.get(lbl, 0) + count
         kept = count
@@ -123,6 +176,20 @@ class ServeStats:
         if kept:
             row = schema.pack_np(seq, src, dst, created_t, completed_t,
                                  exit_label, layers, hops)
+            self._rows.extend([row] * kept)
+
+    def drop(self, *, seq, src, t_now, count=1) -> None:
+        """Record an admission-control drop: ``count`` DROPPED rows at
+        ``t_now`` (created == completed — the request never entered), on
+        the same vocabulary the sim uses for its drops."""
+        self._dropped += count
+        kept = count
+        if self.max_records is not None:
+            kept = max(0, min(count, self.max_records - len(self._rows)))
+            self.record_overflow += count - kept
+        if kept:
+            row = schema.pack_np(seq, src, src, t_now, t_now,
+                                 schema.DROPPED, 0, 0)
             self._rows.extend([row] * kept)
 
     @property
@@ -145,8 +212,37 @@ class ServeStats:
         return dict(self._exit_counts)
 
     @property
-    def avg_latency(self):
-        return self.latency_sum / max(self.completed, 1)
+    def dropped(self) -> int:
+        return self._dropped
+
+    @property
+    def generated(self) -> int:
+        return self._generated
+
+    @property
+    def generated_rows(self) -> int:
+        return self._generated_rows
+
+    @property
+    def avg_latency(self) -> float:
+        """Mean completion latency; ``nan`` (not a fake 0) before the
+        first completion — well-defined and unmistakable downstream."""
+        if self._completed == 0:
+            return float("nan")
+        return self._latency_sum / self._completed
+
+    @property
+    def time_to_first_exit(self) -> float:
+        """First completion time minus first submit time, both in the
+        caller's clock domain — deterministic by construction; ``nan``
+        until both anchors exist."""
+        if self.first_submit_t is None or self.first_exit_t is None:
+            return float("nan")
+        return self.first_exit_t - self.first_submit_t
+
+    def latency_quantiles(self, qs=obs_hist.SLO_QS) -> Dict:
+        """Streaming p50/p99/p999 summary of the latency histogram."""
+        return obs_hist.summary(self.hist_spec, self.latency_counts, qs)
 
     def __repr__(self):
         return (f"ServeStats(completed={self.completed}, "
@@ -158,7 +254,10 @@ class SplitServeEngine:
     """Decoder-only families (dense/moe/vlm): stages = layer ranges."""
 
     def __init__(self, cfg: ModelConfig, params, plan: StagePlan, *,
-                 tau_med=1.0, tau_high=3.0, alpha=0.3, max_results=64):
+                 tau_med=1.0, tau_high=3.0, alpha=0.3, max_results=64,
+                 max_queue: Optional[int] = None, state_every: int = 1,
+                 max_records: Optional[int] = None,
+                 latency_hist: Optional[obs_hist.HistSpec] = None):
         assert cfg.family in ("dense", "moe", "vlm")
         self.cfg = cfg
         self.params = params
@@ -175,7 +274,18 @@ class SplitServeEngine:
         self.tau = (tau_med, tau_high)
         self.alpha = alpha
         self.queues = [deque() for _ in range(self.n_stages)]
-        self.stats = ServeStats()
+        # admission control: a bounded entry queue (sim's queue_slots
+        # analogue) — submits beyond max_queue are dropped-and-recorded,
+        # so an overloaded open-loop experiment reports drop rate instead
+        # of growing without bound.  None (default) keeps the historical
+        # unbounded behavior.
+        self.max_queue = max_queue
+        # flight-recorder stride (sim's trace_state_every analogue):
+        # sample the state stream every state_every-th epoch
+        self.state_every = max(int(state_every), 1)
+        self._epoch = 0
+        self.stats = ServeStats(max_records=max_records,
+                                latency_hist=latency_hist)
         # completion stash, request_id -> logits, for callers that poll
         # after the fact; the primary hand-off is step()'s return value,
         # so the stash is small by default (each entry pins a full
@@ -219,14 +329,29 @@ class SplitServeEngine:
         or wall) — latency is measured against the same domain's ``t_now``
         passed to ``step``.  Omitted, it defaults to the engine's internal
         epoch clock, keeping ``ServeStats`` fully deterministic.
+
+        Returns ``None`` when admission control (``max_queue``) rejects
+        the batch; the rejection is recorded as a DROPPED row.
         """
         h, positions = embed_in(self.params, self.cfg, batch)
+        return self._enqueue(h, positions, t_now, rows=int(h.shape[0]))
+
+    def _enqueue(self, h, positions, t_now: Optional[float],
+                 rows: int = 1) -> Optional[int]:
+        """Admission + queue push shared by submit() and subclasses that
+        skip the embedding (synthetic load)."""
+        t0 = self.clock if t_now is None else t_now
         rid = self._next_id
         self._next_id += 1
         self.stats._generated += 1
+        self.stats.note_submit(t0, rows)
+        if self.max_queue is not None and \
+                len(self.queues[0]) >= self.max_queue:
+            self.stats.drop(seq=rid, src=0, t_now=t0, count=rows)
+            return None
         self.queues[0].append({
             "id": rid, "h": h, "positions": positions,
-            "t0": self.clock if t_now is None else t_now, "stage": 0})
+            "t0": t0, "stage": 0})
         return rid
 
     def step(self, dt: float = 0.05, t_now: Optional[float] = None
@@ -253,9 +378,8 @@ class SplitServeEngine:
             t_now = self.clock
         else:
             self.clock = t_now
-        qlen = jnp.asarray([float(len(q)) for q in self.queues])
-        self.cong = congestion_update(self.cong, qlen, dt, self.alpha)
-        labels = np.asarray(exit_label(self.cong.D, *self.tau))
+        self._epoch += 1
+        labels = self._congestion_labels([len(q) for q in self.queues], dt)
 
         # epoch snapshot: each executor serves at most one request that was
         # already queued at epoch start
@@ -276,7 +400,7 @@ class SplitServeEngine:
                     seq=req["id"], src=0, dst=s, created_t=req["t0"],
                     completed_t=t_now, exit_label=lbl,
                     layers=int(self.plan.boundaries[s + 1]), hops=s,
-                    count=size)
+                    count=size, service_s=(s + 1) * dt)
                 if self.max_results:
                     self.results[req["id"]] = logits
                     while len(self.results) > self.max_results:
@@ -288,10 +412,19 @@ class SplitServeEngine:
                 self.queues[nxt].append(req)
         # flight-recorder sample: post-step depths + the congestion metric
         # D in the phi lane (the serve side's diffusive-metric stand-in)
-        self.stats.record_state(
-            t=t_now, queue_depths=[len(q) for q in self.queues],
-            load=np.asarray(self.cong.D))
+        if self._epoch % self.state_every == 0:
+            self.stats.record_state(
+                t=t_now, queue_depths=[len(q) for q in self.queues],
+                load=np.asarray(self.cong.D))
         return completed
+
+    def _congestion_labels(self, qlens: List[int], dt: float) -> np.ndarray:
+        """Per-executor congestion update (Eqs. 14-15) + exit decision
+        (Eq. 16) for one epoch; subclasses may override with an equivalent
+        host-side mirror (the synthetic load engine does)."""
+        qlen = jnp.asarray([float(x) for x in qlens])
+        self.cong = congestion_update(self.cong, qlen, dt, self.alpha)
+        return np.asarray(exit_label(self.cong.D, *self.tau))
 
     def drain(self, max_steps=1000, dt: float = 0.05):
         for _ in range(max_steps):

@@ -21,6 +21,12 @@ bits) plus system aggregates every N-th epoch; ``decode_state`` /
 heatmaps, energy-drain trajectories and imbalance indices, and
 ``state_counter_events`` renders Perfetto counter tracks.
 
+:mod:`~repro.trace.critical` decomposes each traced task's end-to-end
+latency into compute / queue-wait / airtime / fault-stall segments that
+sum back exactly (DESIGN.md §14.4) — ``segment_indices`` feeds the BENCH
+``latency_segments`` payload and ``attribute`` names the segment that
+moved in a perf-gate regression.
+
 Enabled by ``SwarmConfig.trace_capacity > 0`` (tasks),
 ``SwarmConfig.trace_hop_capacity > 0`` (hops) and
 ``SwarmConfig.trace_state_every > 0`` (state), independently; with the
@@ -28,6 +34,8 @@ defaults 0 no trace state exists anywhere and the simulator is
 bit-identical to an untraced build.
 """
 from repro.trace import schema
+from repro.trace.critical import (SEGMENTS, attribute, decompose,
+                                  hop_stall_fraction, segment_indices)
 from repro.trace.aggregate import (exit_label_histogram, hop_airtime_s,
                                    hop_energy_j, hop_histogram, hop_indices,
                                    int_histogram, jain_fairness, link_bits,
@@ -50,4 +58,6 @@ __all__ = ["schema", "decode", "decode_hops", "decode_state", "split_runs",
            "state_counter_events", "write_chrome_trace",
            "init_trace", "init_hops", "init_state_stream", "state_enabled",
            "traced_push", "write_records", "write_hop_records",
-           "write_state"]
+           "write_state",
+           "SEGMENTS", "decompose", "segment_indices", "attribute",
+           "hop_stall_fraction"]

@@ -1,0 +1,195 @@
+"""SLO observatory metrics-core tests (DESIGN.md §14.1-§14.3): merge
+associativity/commutativity, shard-merge == whole-stream bit-exactness
+across vmap/sharded/streaming fill orders, histogram quantiles within one
+bucket of exact numpy quantiles (including over decoded TaskRecords),
+registry semantics, and the Prometheus render/parse round trip.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.obs import (DEFAULT_LATENCY_HIST, SLO_QS, Registry, hist,
+                       host_class)
+from repro.obs.hist import HistSpec
+from repro.obs.prom import parse, render
+from repro.trace import decode, schema
+
+SPEC = DEFAULT_LATENCY_HIST
+RNG = np.random.default_rng(7)
+
+
+def _sample(n=4096):
+    # spans underflow (zeros, <1e-4), the finite grid, and overflow
+    x = RNG.lognormal(mean=-2.0, sigma=2.0, size=n)
+    x[:5] = 0.0
+    x[5:8] = 1e-6
+    x[8:10] = 1e5
+    return x
+
+
+# ---------------------------------------------------------------------------
+# fill / merge properties
+# ---------------------------------------------------------------------------
+
+def test_fill_np_matches_device_fill_bit_exact():
+    x = _sample()
+    dev = np.asarray(hist.fill(SPEC, hist.empty(SPEC), x), np.int64)
+    host = hist.fill_np(SPEC, hist.empty_np(SPEC), x)
+    np.testing.assert_array_equal(dev, host)
+    assert hist.total(host) == x.size
+
+
+def test_merge_is_associative_and_commutative():
+    a, b, c = (hist.fill_np(SPEC, hist.empty_np(SPEC), _sample(512))
+               for _ in range(3))
+    np.testing.assert_array_equal(hist.merge(hist.merge(a, b), c),
+                                  hist.merge(a, hist.merge(b, c)))
+    np.testing.assert_array_equal(hist.merge(a, b), hist.merge(b, a))
+    np.testing.assert_array_equal(hist.merge(a, b, c), hist.merge(c, b, a))
+
+
+def test_shard_merge_equals_whole_across_fill_orders():
+    """vmap-batched, per-shard jitted, and streaming-chunk fills all merge
+    to the same counts as one whole-stream fill, bit for bit."""
+    x = _sample(4096)
+    whole = hist.fill_np(SPEC, hist.empty_np(SPEC), x)
+
+    shards = x.reshape(8, -1)
+    vmapped = jax.vmap(lambda v: hist.fill(SPEC, hist.empty(SPEC), v))(shards)
+    np.testing.assert_array_equal(hist.merge(*np.asarray(vmapped)), whole)
+
+    jfill = jax.jit(lambda v: hist.fill(SPEC, hist.empty(SPEC), v))
+    sharded = hist.merge(*(np.asarray(jfill(s)) for s in shards))
+    np.testing.assert_array_equal(sharded, whole)
+
+    acc = hist.empty_np(SPEC)       # streaming resume: uneven chunks
+    for chunk in (x[:100], x[100:101], x[101:2048], x[2048:]):
+        hist.fill_np(SPEC, acc, chunk)
+    np.testing.assert_array_equal(acc, whole)
+
+
+def test_weighted_fill_counts_rows():
+    counts = hist.fill_np(SPEC, hist.empty_np(SPEC), [0.5, 0.5, 2.0],
+                          weights=[3, 4, 5])
+    assert hist.total(counts) == 12
+
+
+# ---------------------------------------------------------------------------
+# quantiles
+# ---------------------------------------------------------------------------
+
+def _exact_bucket(spec, v):
+    return int(np.searchsorted(hist.edges(spec),
+                               np.float32(v), side="right"))
+
+
+@pytest.mark.parametrize("q", SLO_QS)
+def test_quantile_within_one_bucket_of_numpy(q):
+    x = RNG.lognormal(mean=-1.0, sigma=1.5, size=20_000)
+    counts = hist.fill_np(SPEC, hist.empty_np(SPEC), x)
+    hb = hist.quantile_bucket(SPEC, counts, q)
+    eb = _exact_bucket(SPEC, np.quantile(x, q))
+    assert abs(hb - eb) <= 1
+    assert hist.quantile(SPEC, counts, q) >= np.quantile(x, q) * 0.999
+
+
+def test_quantiles_from_decoded_task_records():
+    """The acceptance path: TaskRecord stream → decode → latency_s →
+    histogram p50/p99/p999 within one bucket of the exact quantiles."""
+    n = 5000
+    created = RNG.uniform(0.0, 50.0, size=n)
+    lat = RNG.lognormal(mean=-2.5, sigma=1.0, size=n)
+    rows = np.stack([schema.pack_np(i, 0, 1, created[i], created[i] + lat[i],
+                                    0, 30, 1) for i in range(n)])
+    dec = decode(rows)
+    counts = hist.fill_np(SPEC, hist.empty_np(SPEC), dec["latency_s"])
+    for q in SLO_QS:
+        hb = hist.quantile_bucket(SPEC, counts, q)
+        eb = _exact_bucket(SPEC, np.quantile(dec["latency_s"], q))
+        assert abs(hb - eb) <= 1
+    s = hist.summary(SPEC, counts)
+    assert s["count"] == n and s["overflow"] == 0
+    assert s["p50"] <= s["p99"] <= s["p999"]
+
+
+def test_quantile_edge_cases():
+    assert hist.quantile(SPEC, hist.empty_np(SPEC), 0.5) is None
+    over = hist.fill_np(SPEC, hist.empty_np(SPEC), [1e9, 1e9])
+    assert np.isinf(hist.quantile(SPEC, over, 0.5))
+    s = hist.summary(SPEC, over)
+    assert s["p50"] is None and s["overflow"] == 2    # visible, not clamped
+    under = hist.fill_np(SPEC, hist.empty_np(SPEC), [0.0])
+    assert hist.quantile(SPEC, under, 0.5) == pytest.approx(SPEC.lo)
+
+
+def test_q_label_grid():
+    assert [hist.q_label(q) for q in SLO_QS] == ["p50", "p99", "p999"]
+
+
+def test_custom_spec_resolution():
+    spec = HistSpec(lo=1e-3, hi=1e3, buckets=60)
+    assert spec.num_bins == 62
+    assert spec.growth == pytest.approx((1e6) ** (1 / 60))
+    assert hist.edges(spec).shape == (61,)
+    assert np.isinf(hist.upper_edges(spec)[-1])
+
+
+# ---------------------------------------------------------------------------
+# registry + Prometheus round trip
+# ---------------------------------------------------------------------------
+
+def _filled_registry():
+    reg = Registry()
+    reg.counter("repro_test_done_total", "rows done").inc(42)
+    reg.gauge("repro_test_depth", "queue depth").set(3.5)
+    h = reg.histogram("repro_test_latency_seconds", "latency", spec=SPEC)
+    h.observe_many(_sample(256))
+    return reg
+
+
+def test_registry_semantics():
+    reg = _filled_registry()
+    assert reg["repro_test_done_total"].value == 42
+    with pytest.raises(ValueError):
+        reg.counter("repro_test_done_total", "x").inc(-1)
+    with pytest.raises(TypeError):
+        reg.gauge("repro_test_done_total", "wrong kind")
+    g = reg.gauge("repro_test_depth", "queue depth")    # get-or-create
+    g.inc(0.5)
+    assert g.value == pytest.approx(4.0)
+    h = reg["repro_test_latency_seconds"]
+    assert h.count == 256
+    assert h.quantile(0.5) is not None
+
+
+def test_prometheus_round_trip():
+    text = render(_filled_registry())
+    out = parse(text)
+    assert out["types"]["repro_test_latency_seconds"] == "histogram"
+    flat = {name: value for name, labels, value in out["samples"]
+            if not labels}
+    assert flat["repro_test_done_total"] == 42
+    assert flat["repro_test_latency_seconds_count"] == 256
+    # cumulative buckets end at the sample count on the +Inf bucket
+    inf_bucket = [v for name, labels, v in out["samples"]
+                  if name == "repro_test_latency_seconds_bucket"
+                  and labels.get("le") == "+Inf"]
+    assert inf_bucket and inf_bucket[0] == 256
+
+
+def test_prometheus_parser_rejects_malformed():
+    with pytest.raises(ValueError):
+        parse("this is { not prometheus\n")
+    good = render(_filled_registry())
+    broken = good.replace("repro_test_done_total 42",
+                          "repro_test_done_total not-a-number")
+    with pytest.raises(ValueError):
+        parse(broken)
+
+
+def test_host_class_env_override(monkeypatch):
+    monkeypatch.setenv("REPRO_HOST_CLASS", "ci-linux-large")
+    assert host_class() == "ci-linux-large"
+    monkeypatch.delenv("REPRO_HOST_CLASS")
+    hc = host_class()
+    assert hc and "-c" in hc

@@ -11,7 +11,6 @@ from __future__ import annotations
 import dataclasses
 import os
 
-
 from benchmarks.common import ART, DEFAULT_RUNS, ci95, timed_sweep, write_csv
 from repro.configs.base import SwarmConfig
 from repro.swarm import DISTRIBUTED, LOCAL_ONLY

@@ -39,6 +39,9 @@ aggregate indices into ``artifacts/BENCH_fleet.json``.  Env knobs:
   REPRO_FLEET_TRACE_STATE_NODES=M  node subsample of the state stream
                                    (first M nodes; 0 = all)
   REPRO_FULL_RUNS=1         the paper's 50 Monte-Carlo runs (default 16)
+  REPRO_FLEET_FINGERPRINTS=0   skip the J005 compile-fingerprint table
+                               (on by default: tracing is compile-free);
+                               REPRO_FLEET_FINGERPRINT_MAX caps points
 
 Every ``fleet_sweep`` additionally records each point's compile/execute
 wall-clock spans into the ``profile`` section of BENCH_fleet.json, each
@@ -177,7 +180,35 @@ def fleet_sweep(spec: SweepSpec, backend: Optional[str] = None,
             merged = dict(load_bench_json(BENCH_JSON).get("profile", {}))
             merged[spec.name] = payload
             write_bench_json(BENCH_JSON, "profile", merged)
+        fps = _fingerprint_payload(spec)
+        if fps:
+            from repro.fleet.report import load_bench_json
+            merged = dict(load_bench_json(BENCH_JSON).get("fingerprints",
+                                                          {}))
+            merged[spec.name] = fps
+            write_bench_json(BENCH_JSON, "fingerprints", merged)
     return res
+
+
+def _fingerprint_payload(spec: SweepSpec) -> Dict:
+    """J005 compile-fingerprint table of one sweep (DESIGN.md §15.3).
+
+    Tracing is compile-free (``jax.make_jaxpr``, no XLA), so the table is
+    cheap next to the sweep itself; still, ``REPRO_FLEET_FINGERPRINTS=0``
+    opts out and very large grids are capped (skipped points are counted
+    in the payload, never silently dropped).  A tracing failure degrades
+    to an ``error`` entry rather than failing the benchmark run: the
+    fingerprints section is diagnosis for the perf gate, not a gate on
+    producing numbers.
+    """
+    if os.environ.get("REPRO_FLEET_FINGERPRINTS", "1") == "0":
+        return {}
+    cap = int(os.environ.get("REPRO_FLEET_FINGERPRINT_MAX", "64"))
+    try:
+        from repro.analysis.jaxpr.fingerprint import sweep_fingerprint_table
+        return sweep_fingerprint_table(spec, max_points=cap)
+    except Exception as e:  # diagnosis must not sink the producer
+        return {"sweep": spec.name, "error": f"{type(e).__name__}: {e}"}
 
 
 def _profile_payload(spec: SweepSpec, res: Dict[str, Dict],

@@ -10,15 +10,22 @@ from repro.fleet import SweepSpec
 from repro.swarm import DISTRIBUTED
 
 
-def run(gammas=(0.002, 0.01, 0.02, 0.05, 0.1, 0.3), n=30, runs=DEFAULT_RUNS):
-    spec = SweepSpec.build("fig3_gamma", SwarmConfig(num_workers=n),
+def spec(gammas=(0.002, 0.01, 0.02, 0.05, 0.1, 0.3), n=30,
+         runs=DEFAULT_RUNS) -> SweepSpec:
+    """The Fig. 3 grid itself — importable without executing it (the
+    fingerprint recorder traces these points, benchmarks/fingerprints.py)."""
+    return SweepSpec.build("fig3_gamma", SwarmConfig(num_workers=n),
                            axes={"gamma": tuple(gammas)},
                            strategies=(DISTRIBUTED,), num_runs=runs)
-    res = fleet_sweep(spec)
+
+
+def run(gammas=(0.002, 0.01, 0.02, 0.05, 0.1, 0.3), n=30, runs=DEFAULT_RUNS):
+    sp = spec(gammas, n, runs)
+    res = fleet_sweep(sp)
     if not res:
         return []    # non-zero rank of a multi-host dispatch: worker only
     rows = []
-    for pt in spec.expand():
+    for pt in sp.expand():
         m, g = res[pt.label], pt.values["gamma"]
         lat, lat_ci = ci95(m["avg_latency_s"])
         rem, rem_ci = ci95(m["remaining_gflops"])

@@ -11,17 +11,24 @@ from repro.fleet import SweepSpec
 from repro.swarm import STRATEGY_NAMES
 
 
-def run(periods_ms=(60, 70, 80, 90, 100), n=30, runs=DEFAULT_RUNS):
-    spec = SweepSpec.build(
+def spec(periods_ms=(60, 70, 80, 90, 100), n=30,
+         runs=DEFAULT_RUNS) -> SweepSpec:
+    """The Fig. 5 grid itself — importable without executing it (the
+    fingerprint recorder traces these points, benchmarks/fingerprints.py)."""
+    return SweepSpec.build(
         "fig5_rate", SwarmConfig(num_workers=n),
         axes={"period_ms": tuple((p, {"task_period_s": p / 1000.0})
                                  for p in periods_ms)},
         strategies=tuple(range(5)), num_runs=runs)
-    res = fleet_sweep(spec)
+
+
+def run(periods_ms=(60, 70, 80, 90, 100), n=30, runs=DEFAULT_RUNS):
+    sp = spec(periods_ms, n, runs)
+    res = fleet_sweep(sp)
     if not res:
         return []    # non-zero rank of a multi-host dispatch: worker only
     rows = []
-    for pt in spec.expand():
+    for pt in sp.expand():
         m, p = res[pt.label], pt.values["period_ms"]
         name = STRATEGY_NAMES[pt.strategy]
         lat, lat_ci = ci95(m["avg_latency_s"])

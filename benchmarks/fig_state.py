@@ -64,7 +64,7 @@ def run(n=30, runs=DEFAULT_RUNS, strategies=(0, 1, 2, 3, 4),
         if epochs is None:
             epochs = idx["state_epochs"]
         heat = idx["queue_depth_heatmap"]
-        for e, row in zip(idx["queue_depth_heatmap_epochs"], heat):
+        for e, row in zip(idx["queue_depth_heatmap_epochs"], heat, strict=True):
             heat_rows += [[label, int(e), node, d]
                           for node, d in enumerate(row)]
         eps = idx["phi_epochs_to_eps"]

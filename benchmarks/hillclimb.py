@@ -4,6 +4,7 @@
     PYTHONPATH=src python -m benchmarks.hillclimb --cell qwen3-moe-30b-a3b:train_4k \
         --variant dots --variant bf16gather --variant dots+bf16gather+losschunk
 """
+# ruff: noqa: I001  (deliberate order: dryrun's XLA_FLAGS preamble first)
 from __future__ import annotations
 
 

@@ -86,7 +86,7 @@ def _phi_inputs(key, n, runs_axis):
 
 
 def run_phi_wallclock(ns=(1024, 4096), runs_axis=1, iters=3,
-                      out_json=os.path.join(ART, "BENCH_fleet.json")):
+                      out_json=None):
     """Backend-tagged wall-clock of the φ path the simulator dispatches.
 
     Times ``kernels.ops.diffusive_phi`` — the entry point ``run_sim``
@@ -113,6 +113,7 @@ def run_phi_wallclock(ns=(1024, 4096), runs_axis=1, iters=3,
         rows.append({"n": int(n), "runs_axis": int(runs_axis),
                      "backend": backend, "us_per_call": round(us, 1)})
         print(f"diffusive_phi_dispatch_n{n},{us:.1f},{backend}_R{runs_axis}")
+    out_json = out_json or os.path.join(ART, "BENCH_fleet.json")
     write_bench_json(out_json, "microbench_diffusive_phi_wallclock", rows)
     print(f"wrote {out_json} (microbench_diffusive_phi_wallclock, "
           f"{len(rows)} sizes, backend={backend})")
@@ -122,7 +123,7 @@ def run_phi_wallclock(ns=(1024, 4096), runs_axis=1, iters=3,
 def run_phi_sparse_wallclock(ns=(1024, 4096, 16384, 65536), k=16,
                              dense_ns=(1024, 4096), interpret_ns=(256,),
                              iters=3,
-                             out_json=os.path.join(ART, "BENCH_fleet.json")):
+                             out_json=None):
     """Sparse neighbor-list φ path at scale (DESIGN.md §11).
 
     Times the epoch-update pipeline the sparse simulator dispatches —
@@ -207,6 +208,7 @@ def run_phi_sparse_wallclock(ns=(1024, 4096, 16384, 65536), k=16,
         print(f"diffusive_phi_sparse_kernel_n{n},{ref_us:.1f},ref")
         print(f"diffusive_phi_sparse_kernel_n{n},{pal_us:.1f},"
               f"pallas_interpret")
+    out_json = out_json or os.path.join(ART, "BENCH_fleet.json")
     write_bench_json(out_json, "microbench_diffusive_phi_sparse", rows)
     print(f"wrote {out_json} (microbench_diffusive_phi_sparse, "
           f"{len(rows)} rows, backend={backend})")
@@ -215,7 +217,7 @@ def run_phi_sparse_wallclock(ns=(1024, 4096, 16384, 65536), k=16,
 
 def run_trace_overhead(ns=(1024, 4096), sim_time_s=4.0, queue_slots=8,
                        iters=2,
-                       out_json=os.path.join(ART, "BENCH_fleet.json")):
+                       out_json=None):
     """Per-epoch cost of each telemetry stream on the full simulator.
 
     Times one ``run_sim`` call per variant — tracing off, the task stream,
@@ -260,6 +262,7 @@ def run_trace_overhead(ns=(1024, 4096), sim_time_s=4.0, queue_slots=8,
                          "us_per_call": round(us, 1),
                          "us_per_epoch": round(us / n_epochs, 1)})
             print(f"trace_overhead_n{n},{us:.1f},{name}")
+    out_json = out_json or os.path.join(ART, "BENCH_fleet.json")
     write_bench_json(out_json, "microbench_trace_overhead", rows)
     print(f"wrote {out_json} (microbench_trace_overhead, {len(rows)} rows, "
           f"backend={backend})")
@@ -267,7 +270,7 @@ def run_trace_overhead(ns=(1024, 4096), sim_time_s=4.0, queue_slots=8,
 
 
 def run_phi_sweep(ns=(256, 1024, 4096), runs_axis=1, iters=2,
-                  out_json=os.path.join(ART, "BENCH_fleet.json"),
+                  out_json=None,
                   wallclock_ns=(1024, 4096)):
     """diffusive_phi at swarm scale: jnp reference vs Pallas interpret mode.
 
@@ -295,6 +298,7 @@ def run_phi_sweep(ns=(256, 1024, 4096), runs_axis=1, iters=2,
         rows.append(row)
         print(f"diffusive_phi_n{n},{ref_us:.1f},ref_R{runs_axis}")
         print(f"diffusive_phi_n{n},{pal_us:.1f},pallas_interpret_R{runs_axis}")
+    out_json = out_json or os.path.join(ART, "BENCH_fleet.json")
     write_bench_json(out_json, "microbench_diffusive_phi", rows)
     print(f"wrote {out_json} (microbench_diffusive_phi, {len(rows)} sizes)")
     if wallclock_ns:

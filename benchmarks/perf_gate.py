@@ -31,6 +31,13 @@ in both files' sweep sections and names the segment whose quantile moved
 the most — a regression report says *queue-wait regressed*, not just
 "slower" (DESIGN.md §14.5).
 
+When the BENCH files carry ``fingerprints`` sections (the J005
+compile-fingerprint tables ``fleet_sweep`` records, DESIGN.md §15.3), the
+gate also prints which point's traced program changed against the
+baseline and which same-signature groups split — so "slower" comes with
+"because this point started recompiling" when that is the cause.
+Fingerprint moves are diagnosis, never a failure by themselves.
+
 Usage::
 
     python benchmarks/perf_gate.py \
@@ -119,6 +126,63 @@ def attribute_failure(base_doc: dict, cur_doc: dict, sweep: str,
     return attribute(bseg, cseg, quantile)
 
 
+def fingerprint_notes(base_doc: dict, cur_doc: dict):
+    """Compile-fingerprint diagnosis lines (J005, DESIGN.md §15.3).
+
+    ``fleet_sweep`` emits a per-sweep fingerprint table into the
+    ``fingerprints`` BENCH section; this names (a) same-structural-
+    signature groups that trace distinct programs *within* the current
+    file and (b) points whose fingerprint moved against the baseline —
+    i.e. exactly which point started recompiling.  Diagnosis only: a
+    fingerprint move explains an execute regression, it never gates by
+    itself (deliberate program changes legitimately move fingerprints;
+    the jaxpr lint tier owns the stability invariant).
+    """
+    base_fp = base_doc.get("fingerprints", {})
+    cur_fp = cur_doc.get("fingerprints", {})
+    notes = []
+    for sweep, table in sorted(cur_fp.items()):
+        if table.get("error"):
+            notes.append(f"{sweep}: fingerprint table unavailable "
+                         f"({table['error']})")
+            continue
+        for g in table.get("unstable_groups", []):
+            progs = g.get("programs", {})
+            notes.append(
+                f"{sweep}: {len(g.get('points', []))} structurally "
+                f"identical points trace {len(progs)} distinct programs: "
+                + "; ".join(f"{fp} <- {', '.join(pts)}"
+                            for fp, pts in sorted(progs.items())))
+        base_table = base_fp.get(sweep, {})
+        base_pts = base_table.get("points", {})
+        for label, fp in sorted(table.get("points", {}).items()):
+            b = base_pts.get(label)
+            if b is None or b == fp:
+                continue
+            bsig = _group_signature(base_table, label)
+            csig = _group_signature(table, label)
+            if bsig is not None and csig is not None and bsig != csig:
+                # same label, different experiment (e.g. a runs=4 CI
+                # smoke vs the committed full grid): a fingerprint
+                # difference is expected, not a recompile signal
+                notes.append(f"{sweep}/{label}: structural signature "
+                             "differs from the baseline's (different "
+                             "num_runs / trace knobs) — fingerprint "
+                             "not comparable, skipped")
+                continue
+            notes.append(f"{sweep}/{label}: compile fingerprint "
+                         f"{b} -> {fp} — this point recompiles "
+                         "vs the committed baseline")
+    return notes
+
+
+def _group_signature(table: dict, label: str):
+    for g in table.get("groups", []):
+        if label in g.get("points", []):
+            return g.get("signature")
+    return None
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--baseline", required=True,
@@ -149,6 +213,8 @@ def main(argv=None) -> int:
     checked, skipped, failures = compare(baseline, current,
                                          args.max_ratio, args.min_seconds,
                                          args.rel_tol)
+    for note in fingerprint_notes(base_doc, cur_doc):
+        print(f"perf_gate: fingerprint: {note}")
     for name, be, ce, ratio in checked:
         print(f"perf_gate: {name} execute {be:.3f}s -> {ce:.3f}s "
               f"(x{ratio:.2f})")

@@ -23,6 +23,13 @@ Rules (each in its own module):
     registry key is referenced by a test and documented in DESIGN.md;
     ``DESIGN.md §N[.M]`` docstring citations must resolve.
 
+The R rules above are **tier 1** (pure-AST: fast, dependency-free).
+``repro.analysis.jaxpr`` adds **tier 2** — J001–J005 lint the *traced*
+programs (scan-reduction purity, x64 dtype drift, gather OOB modes,
+closure-constant bloat, compile-fingerprint stability; DESIGN.md §15) —
+selected with ``--tier ast|jaxpr|all``.  Both tiers share the
+:class:`Finding` type and the baseline file.
+
 Entry points: ``python -m repro.analysis`` (CLI, nonzero exit on
 unbaselined findings) and :func:`run` (used by ``tests/test_analysis.py``
 to keep the tree clean under tier-1).  Deliberate violations are
@@ -33,9 +40,9 @@ from __future__ import annotations
 
 from typing import List, Optional, Sequence
 
+from repro.analysis import consistency, digest, keys, purity
 from repro.analysis.astutil import Finding, Tree
 from repro.analysis.baseline import Baseline, load_baseline
-from repro.analysis import consistency, digest, keys, purity
 
 RULES = {
     "R001": keys.check,
@@ -44,25 +51,52 @@ RULES = {
     "R004": consistency.check,
 }
 
+#: tier-2 rule ids, known here so the CLI can validate ``--rules`` and
+#: ``--list-rules`` without importing jax (the implementation registry
+#: lives in ``repro.analysis.jaxpr`` and is imported lazily by tier)
+JAXPR_RULE_IDS = ("J001", "J002", "J003", "J004", "J005")
+
 RULE_DOCS = {
     "R001": "PRNG key consumed by two independent sinks (def-use)",
     "R002": "config field missing from the store digest (no exemption)",
     "R003": "host-side impurity reachable from the jitted scan",
     "R004": "registry key untested/undocumented, or dangling §-citation",
+    "J001": "in-scan cross-node float reduction (backend parity hazard)",
+    "J002": "dtype/weak-type drift between x32 and x64 traces",
+    "J003": "unannotated CLIP/FILL_OR_DROP gather/scatter",
+    "J004": "oversized constants closed into a traced program",
+    "J005": "data-only sweep points tracing distinct programs",
 }
+
+#: every rule id across both tiers (CLI validation surface)
+ALL_RULE_IDS = tuple(sorted(RULES)) + JAXPR_RULE_IDS
+
+TIERS = ("ast", "jaxpr", "all")
 
 
 def run(root: str, rules: Optional[Sequence[str]] = None,
         baseline: Optional[Baseline] = None,
-        use_baseline: bool = True) -> List[Finding]:
-    """Run ``rules`` (default: all) over the tree at ``root``; returns the
-    findings that survive the baseline (i.e. the ones that should fail)."""
-    tree = Tree.load(root)
+        use_baseline: bool = True, tier: str = "ast") -> List[Finding]:
+    """Run ``rules`` (default: all of the selected tier) over the tree at
+    ``root``; returns the findings that survive the baseline (i.e. the
+    ones that should fail).  ``tier`` picks the AST rules (default — the
+    fast, jax-free path the tier-1 suite gates on), the jaxpr rules, or
+    both; explicit ``rules`` are routed to their tier automatically."""
+    if tier not in TIERS:
+        raise ValueError(f"unknown tier {tier!r} (known: {TIERS})")
     if baseline is None and use_baseline:
         baseline = load_baseline(root)
+    ast_ids = [r for r in rules if r in RULES] if rules is not None else None
+    jax_ids = ([r for r in rules if r in JAXPR_RULE_IDS]
+               if rules is not None else None)
     findings: List[Finding] = []
-    for rid in rules or sorted(RULES):
-        findings.extend(RULES[rid](tree, baseline))
+    if tier in ("ast", "all") and (ast_ids is None or ast_ids):
+        tree = Tree.load(root)
+        for rid in ast_ids if ast_ids is not None else sorted(RULES):
+            findings.extend(RULES[rid](tree, baseline))
+    if tier in ("jaxpr", "all") and (jax_ids is None or jax_ids):
+        from repro.analysis.jaxpr import run_jaxpr   # lazy: imports jax
+        findings.extend(run_jaxpr(root, jax_ids))
     if baseline is not None:
         findings = [f for f in findings if not baseline.allows(f)]
     return sorted(findings, key=lambda f: (f.file, f.line, f.rule))

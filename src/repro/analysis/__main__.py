@@ -1,10 +1,16 @@
 """``python -m repro.analysis`` — run swarmlint over a repo tree.
 
 Exit status 0 when the tree is clean (after the baseline), 1 when any
-finding survives, 2 on usage/configuration errors.  ``--format json``
+finding survives, 2 on usage/configuration errors.  ``--tier`` selects
+the AST rules (R…, default — fast and jax-free), the jaxpr rules (J…,
+trace the real programs; DESIGN.md §15), or both.  ``--format json``
 emits one machine-readable document (findings + counts) for CI tooling;
-the default text format is one ``file:line: RULE symbol message`` row per
-finding, grep- and editor-friendly.
+``--format sarif`` emits SARIF 2.1.0 for code-scanning upload; the
+default text format is one ``file:line: RULE symbol message`` row per
+finding, grep- and editor-friendly.  ``--prune-baseline`` rewrites
+``analysis_baseline.toml`` in place, dropping ``[[allow]]`` entries whose
+finding no longer fires (dead entries would mask a future regression at
+the same site).
 """
 from __future__ import annotations
 
@@ -13,8 +19,10 @@ import json
 import os
 import sys
 
-from repro.analysis import RULE_DOCS, RULES, run
-from repro.analysis.baseline import BASELINE_NAME, load_baseline
+from repro.analysis import (ALL_RULE_IDS, JAXPR_RULE_IDS, RULE_DOCS, RULES,
+                            TIERS, run)
+from repro.analysis.baseline import (BASELINE_NAME, load_baseline,
+                                     prune_baseline)
 
 
 def _detect_root(start: str) -> str:
@@ -32,40 +40,89 @@ def _detect_root(start: str) -> str:
         cur = parent
 
 
+def _tier_rule_ids(tier: str):
+    ids = []
+    if tier in ("ast", "all"):
+        ids.extend(sorted(RULES))
+    if tier in ("jaxpr", "all"):
+        ids.extend(JAXPR_RULE_IDS)
+    return ids
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
-        description="swarmlint: repo-native static analysis (DESIGN.md §13)")
+        description="swarmlint: repo-native static analysis "
+                    "(DESIGN.md §13, §15)")
     ap.add_argument("--root", default=None,
                     help="repo root to scan (default: auto-detect upward "
                          "from the working directory)")
-    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--tier", choices=TIERS, default=None,
+                    help="rule tier: 'ast' (R rules, no jax needed), "
+                         "'jaxpr' (J rules, traces the real programs), or "
+                         "'all' (default: inferred from --rules, else ast)")
+    ap.add_argument("--format", choices=("text", "json", "sarif"),
+                    default="text")
     ap.add_argument("--rules", default=None,
-                    help="comma-separated rule ids (default: all)")
+                    help="comma-separated rule ids (default: all of the "
+                         "selected tier)")
     ap.add_argument("--no-baseline", action="store_true",
                     help=f"ignore {BASELINE_NAME} and report everything")
+    ap.add_argument("--prune-baseline", action="store_true",
+                    help=f"rewrite {BASELINE_NAME}, dropping [[allow]] "
+                         "entries whose finding no longer fires (only "
+                         "entries of rules run this invocation)")
     ap.add_argument("--list-rules", action="store_true")
     args = ap.parse_args(argv)
 
     if args.list_rules:
-        for rid in sorted(RULES):
-            print(f"{rid}  {RULE_DOCS[rid]}")
+        for rid in ALL_RULE_IDS:
+            tier = "ast" if rid in RULES else "jaxpr"
+            print(f"{rid}  [{tier}]  {RULE_DOCS[rid]}")
         return 0
 
     root = os.path.abspath(args.root) if args.root else _detect_root(".")
     rules = None
     if args.rules:
         rules = [r.strip().upper() for r in args.rules.split(",") if r.strip()]
-        unknown = set(rules) - set(RULES)
+        unknown = set(rules) - set(ALL_RULE_IDS)
         if unknown:
             print(f"unknown rules: {sorted(unknown)} "
-                  f"(known: {sorted(RULES)})", file=sys.stderr)
+                  f"(known: {list(ALL_RULE_IDS)})", file=sys.stderr)
+            return 2
+
+    tier = args.tier
+    if tier is None:
+        # infer: explicit rules pick their tiers; default stays ast (the
+        # cheap path — tier 2 re-traces every registered program)
+        if rules is not None:
+            has_ast = any(r in RULES for r in rules)
+            has_jax = any(r in JAXPR_RULE_IDS for r in rules)
+            tier = ("all" if has_ast and has_jax
+                    else "jaxpr" if has_jax else "ast")
+        else:
+            tier = "ast"
+    elif rules is not None:
+        routed = [r for r in rules if r in _tier_rule_ids(tier)]
+        if not routed:
+            print(f"none of {rules} belong to tier {tier!r}; pass --tier "
+                  "all (or drop --tier to infer it)", file=sys.stderr)
             return 2
 
     try:
         baseline = None if args.no_baseline else load_baseline(root)
         findings = run(root, rules=rules, baseline=baseline,
-                       use_baseline=not args.no_baseline)
+                       use_baseline=not args.no_baseline, tier=tier)
+        if args.prune_baseline:
+            raw = run(root, rules=rules, use_baseline=False, tier=tier)
+            live = {(f.rule, f.file, f.symbol) for f in raw}
+            ran = rules if rules is not None else _tier_rule_ids(tier)
+            dropped = prune_baseline(root, live, ran)
+            for rule, fname, symbol in dropped:
+                print(f"pruned dead baseline entry: {rule} {fname} "
+                      f"[{symbol}]")
+            if not dropped:
+                print("baseline already minimal: nothing to prune")
     except ValueError as e:       # malformed baseline is a hard error
         print(f"error: {e}", file=sys.stderr)
         return 2
@@ -74,15 +131,23 @@ def main(argv=None) -> int:
     if args.format == "json":
         print(json.dumps({
             "root": root,
-            "rules": rules or sorted(RULES),
+            "tier": tier,
+            "rules": rules or _tier_rule_ids(tier),
             "baselined": baselined,
             "findings": [f.to_dict() for f in findings],
         }, indent=2, sort_keys=True))
+    elif args.format == "sarif":
+        from repro.analysis.sarif import to_sarif
+        docs = {rid: RULE_DOCS[rid] for rid in
+                (rules or _tier_rule_ids(tier))}
+        print(json.dumps(to_sarif(findings, docs, root),
+                         indent=2, sort_keys=True))
     else:
         for f in findings:
             print(f"{f.file}:{f.line}: {f.rule} [{f.symbol}] {f.message}")
         tag = f" ({baselined} baselined)" if baselined else ""
-        print(f"swarmlint: {len(findings)} finding(s){tag} in {root}")
+        print(f"swarmlint[{tier}]: {len(findings)} finding(s){tag} "
+              f"in {root}")
     return 1 if findings else 0
 
 

@@ -117,3 +117,79 @@ def load_baseline(root: str) -> Optional[Baseline]:
         return None
     with open(path, encoding="utf-8") as f:
         return parse_baseline(f.read(), path)
+
+
+# ---------------------------------------------------------------------------
+# pruning (``--prune-baseline``): dead [[allow]] entries mask regressions
+# ---------------------------------------------------------------------------
+
+
+def prune_baseline_text(text: str, live, rules_run) -> tuple:
+    """Drop every ``[[allow]]`` block whose (rule, file, symbol) matches
+    no live finding.  Returns ``(new_text, dropped)`` where ``dropped``
+    is the list of removed triples.
+
+    Only entries whose rule is in ``rules_run`` are candidates — an entry
+    for a rule that did not execute this invocation (e.g. a J rule under
+    ``--tier ast``) cannot be proven dead and is kept.  The rewrite is
+    textual and scoped to the dropped blocks (first ``[[allow]]`` line
+    through the last key line before the next table header), so comments
+    and ``[[digest_exempt]]`` entries survive byte-for-byte.
+    """
+    lines = text.splitlines(keepends=True)
+    # block spans: (start, end, triple) — end exclusive
+    spans = []
+    i = 0
+    while i < len(lines):
+        if lines[i].strip() == "[[allow]]":
+            start = i
+            entry = {}
+            i += 1
+            while i < len(lines):
+                s = lines[i].strip()
+                if s.startswith("[["):
+                    break
+                m = _KV.match(s)
+                if m:
+                    entry[m.group(1)] = m.group(2)
+                i += 1
+            # trim trailing blank/comment lines back out of the block so
+            # the next block's leading comments aren't swallowed
+            end = i
+            while end > start + 1 and not _KV.match(lines[end - 1].strip()):
+                end -= 1
+            spans.append((start, end,
+                          (entry.get("rule", ""), entry.get("file", ""),
+                           entry.get("symbol", ""))))
+        else:
+            i += 1
+    live = set(live)
+    dropped = [t for _, _, t in spans
+               if t not in live and t[0] in set(rules_run)]
+    keep_mask = [True] * len(lines)
+    for start, end, t in spans:
+        if t in dropped:
+            for j in range(start, end):
+                keep_mask[j] = False
+            # also absorb one trailing blank line left behind
+            if end < len(lines) and not lines[end].strip():
+                keep_mask[end] = False
+    new_text = "".join(ln for ln, keep in zip(lines, keep_mask, strict=True) if keep)
+    return new_text, dropped
+
+
+def prune_baseline(root: str, live, rules_run) -> list:
+    """Rewrite ``analysis_baseline.toml`` in place, dropping dead
+    ``[[allow]]`` entries; returns the dropped (rule, file, symbol)
+    triples (empty when the file is absent or already minimal)."""
+    path = os.path.join(root, BASELINE_NAME)
+    if not os.path.isfile(path):
+        return []
+    with open(path, encoding="utf-8") as f:
+        text = f.read()
+    new_text, dropped = prune_baseline_text(text, live, rules_run)
+    if dropped:
+        parse_baseline(new_text, path)     # never write an unloadable file
+        with open(path, "w", encoding="utf-8") as f:
+            f.write(new_text)
+    return dropped

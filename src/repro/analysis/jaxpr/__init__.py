@@ -1,0 +1,70 @@
+"""swarmlint tier 2 — jaxpr-level auditing (DESIGN.md §15).
+
+Tier 1 (``repro.analysis``'s R rules) reads source text; this tier reads
+what the compiler actually traces.  The registry in ``targets.py`` names
+the real programs (simulator paths, φ kernels, executor backends, the
+serve-engine numeric core), traces each once under x32 *and* x64, and the
+rules lint the shared traces:
+
+  * **J001 scan-reduction purity** (``rules.py``) — no cross-node float
+    reductions inside the scan body (mechanizes DESIGN.md §8.2).
+  * **J002 dtype stability** (``rules.py``) — the traced types must not
+    depend on the global x64 flag (weak-type leaks, f64 promotion,
+    flag-dependent trace failures).
+  * **J003 gather/scatter OOB audit** (``rules.py``) — every CLIP /
+    FILL_OR_DROP site carries an inline ``# oob: <reason>`` annotation.
+  * **J004 closure-constant bloat** (``rules.py``) — no large arrays
+    baked into a program's constants.
+  * **J005 compile-fingerprint stability** (``fingerprint.py``) —
+    sweep points differing only in data trace identical programs.
+
+Findings share tier 1's :class:`~repro.analysis.astutil.Finding` type and
+``analysis_baseline.toml`` matching; ``python -m repro.analysis --tier
+jaxpr`` (or ``all``) runs this tier.  Everything degrades to no findings
+when jax is unavailable — tier 1 must keep working anywhere.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+from repro.analysis.astutil import Finding
+from repro.analysis.jaxpr import fingerprint, rules
+from repro.analysis.jaxpr.jaxpr_util import HAVE_JAX
+from repro.analysis.jaxpr.targets import all_targets, trace_targets
+
+JAXPR_RULES = {
+    "J001": rules.check_j001,
+    "J002": rules.check_j002,
+    "J003": rules.check_j003,
+    "J004": rules.check_j004,
+    "J005": fingerprint.check_j005,
+}
+
+JAXPR_RULE_DOCS = {
+    "J001": "in-scan cross-node float reduction (backend parity hazard)",
+    "J002": "dtype/weak-type drift between x32 and x64 traces",
+    "J003": "unannotated CLIP/FILL_OR_DROP gather/scatter",
+    "J004": "oversized constants closed into a traced program",
+    "J005": "data-only sweep points tracing distinct programs",
+}
+
+
+def run_jaxpr(root: str, rule_ids: Optional[Sequence[str]] = None
+              ) -> List[Finding]:
+    """Trace the target registry once, run the selected J rules over the
+    shared traces.  Returns raw findings (baseline applied by the caller,
+    same as the tier-1 rule functions)."""
+    if not HAVE_JAX:                                 # pragma: no cover
+        return []
+    ids = list(rule_ids) if rule_ids is not None else sorted(JAXPR_RULES)
+    # J005 traces its own sweeps; don't pay for the target registry
+    # unless a structural rule actually runs
+    traced = trace_targets() if any(i != "J005" for i in ids) else {}
+    findings: List[Finding] = []
+    for rid in ids:
+        findings.extend(JAXPR_RULES[rid](traced, root))
+    return findings
+
+
+__all__ = ["JAXPR_RULES", "JAXPR_RULE_DOCS", "run_jaxpr", "all_targets",
+           "trace_targets", "HAVE_JAX"]

@@ -1,0 +1,253 @@
+"""Tier-2 rules J001–J004: lint the traced programs (DESIGN.md §15.2).
+
+Each rule takes the shared ``{name: TracedTarget}`` map (one trace per
+target, reused by every rule) plus the repo root, and yields tier-1
+:class:`repro.analysis.astutil.Finding` rows — same baseline matching,
+same CLI rendering.  J005 (compile-fingerprint stability) lives in
+``fingerprint.py``.
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, Iterable, List, Set, Tuple
+
+from repro.analysis.astutil import Finding
+from repro.analysis.jaxpr.jaxpr_util import (aval_size_bytes, iter_eqns,
+                                             out_signature, source_site)
+from repro.analysis.jaxpr.targets import TracedTarget
+
+# --------------------------------------------------------------------------
+# J001 — no cross-node reductions inside the scan body (DESIGN.md §8.2)
+# --------------------------------------------------------------------------
+
+#: reduction primitives that collapse an axis by *accumulation* — the
+#: float cases reassociate with the batch shape across backends
+_ACCUM_REDUCE = {"reduce_sum", "reduce_prod", "cumsum", "cumprod",
+                 "dot_general"}
+#: always-allowed reductions: exact in any association order
+_EXACT_REDUCE = {"reduce_min", "reduce_max", "reduce_and", "reduce_or",
+                 "argmin", "argmax", "reduce_precision"}
+
+
+def _drops_n(eqn, n_axis: int) -> bool:
+    """True when the equation consumes an N-sized axis its output lacks.
+
+    Per-node neighbor aggregations ([N, N] → [N], Eqs. 10–13) keep an
+    N-sized output axis and stay allowed; only full cross-node collapses
+    (→ scalar, or → shapes with no N axis) are the §8.2 hazard."""
+    try:
+        in_has = any(n_axis in getattr(v.aval, "shape", ())
+                     for v in eqn.invars)
+        out_has = any(n_axis in getattr(v.aval, "shape", ())
+                      for v in eqn.outvars)
+    except Exception:                                # pragma: no cover
+        return False
+    return in_has and not out_has
+
+
+def _is_float(eqn) -> bool:
+    dt = getattr(eqn.invars[0].aval, "dtype", None)
+    return dt is not None and dt.kind == "f"
+
+
+def check_j001(traced: Dict[str, TracedTarget], root: str
+               ) -> Iterable[Finding]:
+    """J001: in-scan cross-node float reductions break backend parity.
+
+    Exact reductions (min/max/arg/and/or) and integer/bool sums are
+    whitelisted — they are associativity-safe, so re-chunking the batch
+    axis (vmap vs shard_map vs streaming) cannot move a ulp.  Float
+    accumulations over the N axis inside the scan must move to per-node
+    accumulators summed outside the scan (as ``e_comp``/``e_tx`` were in
+    PR 8) or carry a baseline entry documenting why the collapse is safe.
+    """
+    del root
+    seen: Set[Tuple] = set()
+    for tt in traced.values():
+        if tt.jaxpr32 is None or tt.n_axis is None:
+            continue
+        for site in iter_eqns(tt.jaxpr32.jaxpr):
+            if not site.in_scan:
+                continue
+            prim = site.eqn.primitive.name
+            if prim not in _ACCUM_REDUCE:
+                continue
+            if not _drops_n(site.eqn, tt.n_axis):
+                continue
+            if not _is_float(site.eqn):
+                continue                 # integer/bool accumulation: exact
+            fname, line, func = source_site(site.eqn)
+            if fname is None:
+                fname, func = "src/repro/analysis/jaxpr/targets.py", tt.name
+            key = ("J001", fname, line, func, prim)
+            if key in seen:
+                continue
+            seen.add(key)
+            yield Finding(
+                "J001", fname, line, func,
+                f"in-scan cross-node reduction: '{prim}' collapses the "
+                f"N axis to a float inside the scan body (traced via "
+                f"{tt.name}); float sums reassociate with the batch "
+                f"shape and break cross-backend bit-identity "
+                f"(DESIGN.md §8.2) — accumulate per node and "
+                f"reduce in summarize, or baseline with a reason")
+
+
+# --------------------------------------------------------------------------
+# J002 — dtype / weak-type drift between x32 and x64 traces
+# --------------------------------------------------------------------------
+
+
+def check_j002(traced: Dict[str, TracedTarget], root: str
+               ) -> Iterable[Finding]:
+    """J002: the program's types must not depend on the global x64 flag.
+
+    Three signals, in escalating severity: (a) a *weak* dtype in the
+    x32 output signature (a python scalar leaked through to a public
+    output — its dtype is promotion-context-dependent); (b) an output
+    aval that differs between the x32 and x64 traces (some intermediate
+    is pinned to the flag default, not to an explicit dtype — exactly
+    how f64 literals sneak into compile signatures); (c) the x64 trace
+    *raising* (branch/carry dtype mismatches that only materialize under
+    promotion — latent until someone flips the flag).
+    """
+    del root
+    tfile = "src/repro/analysis/jaxpr/targets.py"
+    for tt in traced.values():
+        if tt.jaxpr32 is None:
+            continue
+        weak = [i for i, v in enumerate(tt.jaxpr32.jaxpr.outvars)
+                if getattr(v.aval, "weak_type", False)]
+        if weak:
+            yield Finding(
+                "J002", tfile, 0, tt.name,
+                f"weak-typed output aval(s) {weak} in target "
+                f"'{tt.name}': a python scalar reaches the traced "
+                f"program's outputs; pin an explicit dtype")
+        if tt.err64 is not None:
+            yield Finding(
+                "J002", tfile, 0, tt.name,
+                f"target '{tt.name}' fails to trace under x64 "
+                f"({type(tt.err64).__name__}): "
+                f"{str(tt.err64).splitlines()[0][:160]} — a branch "
+                f"or scan-carry dtype depends on the x64 flag")
+            continue
+        sig32 = out_signature(tt.jaxpr32)
+        sig64 = out_signature(tt.jaxpr64)
+        drift = [(i, a, b) for i, (a, b) in enumerate(zip(sig32, sig64, strict=True))
+                 if a != b]
+        if drift:
+            i, a, b = drift[0]
+            yield Finding(
+                "J002", tfile, 0, tt.name,
+                f"dtype drift in target '{tt.name}': {len(drift)} "
+                f"output aval(s) change under x64 (first: output {i} "
+                f"{a} → {b}); an unpinned default dtype is leaking "
+                f"into the compile signature")
+
+
+# --------------------------------------------------------------------------
+# J003 — gather/scatter out-of-bounds-mode audit
+# --------------------------------------------------------------------------
+
+#: OOB modes that *silently mask* a bad index (clamp or drop/fill).
+#: PROMISE_IN_BOUNDS is an explicit caller contract (jnp's default for
+#: array indexing) and is out of scope — see DESIGN.md §15.2.
+_MASKING_MODES = ("CLIP", "FILL_OR_DROP")
+#: inline annotation marker acknowledging deliberate clip/fill semantics
+OOB_MARK = "# oob:"
+#: source-window (lines) searched around the anchored line — multi-line
+#: ``.at[...].set(...)`` statements anchor anywhere inside the call
+_OOB_WINDOW = 2
+
+
+# module-level source cache for _is_annotated, keyed by (root, fname) —
+# a memo, not shared state: entries are only ever the file's lines
+_SRC_CACHE: Dict[Tuple[str, str], List[str]] = {}
+
+
+def _is_annotated(root: str, fname: str, line: int) -> bool:
+    ck = (root, fname)
+    if ck not in _SRC_CACHE:
+        try:
+            with open(os.path.join(root, fname)) as f:
+                _SRC_CACHE[ck] = f.readlines()
+        except OSError:
+            _SRC_CACHE[ck] = []
+    lines = _SRC_CACHE[ck]
+    lo = max(0, line - 1 - _OOB_WINDOW)
+    hi = min(len(lines), line + _OOB_WINDOW)
+    return any(OOB_MARK in ln for ln in lines[lo:hi])
+
+
+def check_j003(traced: Dict[str, TracedTarget], root: str
+               ) -> Iterable[Finding]:
+    """J003: every masking-mode gather/scatter must be annotated.
+
+    The sparse neighbor path and the trace streams lean on clip/fill
+    semantics on purpose — but the same modes also silently swallow
+    genuine index bugs.  Each such site must carry an inline
+    ``# oob: <why the masking is correct>`` comment within two lines of
+    the operation (or a baseline entry)."""
+    seen: Set[Tuple] = set()
+    for tt in traced.values():
+        if tt.jaxpr32 is None:
+            continue
+        for site in iter_eqns(tt.jaxpr32.jaxpr):
+            prim = site.eqn.primitive.name
+            if not prim.startswith(("gather", "scatter")):
+                continue
+            mode = str(site.eqn.params.get("mode"))
+            if not mode.endswith(_MASKING_MODES):
+                continue
+            fname, line, func = source_site(site.eqn)
+            if fname is None or not fname.startswith("src" + os.sep):
+                continue                 # jax-internal site: not ours
+            key = ("J003", fname, line)
+            if key in seen:
+                continue
+            seen.add(key)
+            if _is_annotated(root, fname, line):
+                continue
+            short = mode.rsplit(".", 1)[-1]
+            yield Finding(
+                "J003", fname, line, func,
+                f"unannotated {short} {prim}: out-of-bounds indices are "
+                f"silently masked here (traced via {tt.name}); add an "
+                f"'{OOB_MARK} <reason>' comment within {_OOB_WINDOW} "
+                f"lines or baseline with a reason")
+
+
+# --------------------------------------------------------------------------
+# J004 — closure-constant bloat
+# --------------------------------------------------------------------------
+
+#: bytes of closed-over constants a single program may bake in before we
+#: call it bloat (recompiles duplicate it per point; at N = 64k a stray
+#: [N, N] table is 16 GiB)
+J004_MAX_CONST_BYTES = 1 << 20
+
+
+def check_j004(traced: Dict[str, TracedTarget], root: str
+               ) -> Iterable[Finding]:
+    """J004: large arrays closed into a jaxpr become per-compile payload."""
+    del root
+    tfile = "src/repro/analysis/jaxpr/targets.py"
+    for tt in traced.values():
+        if tt.jaxpr32 is None:
+            continue
+        total = 0
+        worst = None
+        for cv in tt.jaxpr32.jaxpr.constvars:
+            nbytes = aval_size_bytes(cv.aval)
+            total += nbytes
+            if worst is None or nbytes > worst[0]:
+                worst = (nbytes, str(cv.aval))
+        if total > J004_MAX_CONST_BYTES:
+            yield Finding(
+                "J004", tfile, 0, tt.name,
+                f"closure-constant bloat in target '{tt.name}': "
+                f"{total} bytes of consts baked into the jaxpr "
+                f"(largest {worst[1]}, {worst[0]} bytes; cap "
+                f"{J004_MAX_CONST_BYTES}); pass big tables as arguments "
+                f"so sweep points share them")

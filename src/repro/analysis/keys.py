@@ -33,7 +33,7 @@ from repro.analysis.astutil import (Finding, Module, Tree, dotted_name,
                                     import_table)
 
 RULE = "R001"
-SCOPES = ("/swarm/", "/core/", "/trace/")
+SCOPES = ("/swarm/", "/core/", "/trace/", "/obs/", "/splitcompute/")
 # jax.random constructors whose *result* is a key (tracked as new defs)
 KEY_MAKERS = {"split", "fold_in", "PRNGKey", "key", "clone"}
 _PARAM_KEY = ("key", "rng")

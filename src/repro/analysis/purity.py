@@ -36,8 +36,15 @@ from repro.analysis.astutil import (Finding, Tree, dotted_name, functions,
                                     import_table, resolve_call)
 
 RULE = "R003"
-ROOT_FUNCS = {"run_sim", "_epoch", "_tick"}
-ROOT_METHODS = {("ServeEngine", "step")}
+# run_open_loop / slo_indices: the PR 9 observability surface makes the
+# same promise as the engine ("timestamps from the caller's clock domain,
+# never wall time"), so the open-loop driver and the SLO reducer are
+# audited as roots too
+ROOT_FUNCS = {"run_sim", "_epoch", "_tick", "run_open_loop", "slo_indices"}
+# class entries are *suffix*-matched, so SplitServeEngine.step and
+# SyntheticServeEngine.submit (obs/loadgen.py) are roots, not just a
+# class literally named ServeEngine
+ROOT_METHODS = {("ServeEngine", "step"), ("ServeEngine", "submit")}
 REGISTER_FUNCS = {"register_mobility", "register_channel",
                   "register_channel_edges", "register_fault"}
 
@@ -145,9 +152,10 @@ def _roots(graph: _Graph, tree: Tree) -> List[Tuple[str, str]]:
         base = qual.split(".")[-1]
         if "." not in qual and base in ROOT_FUNCS:
             roots.append((path, qual))
-        if "." in qual and tuple(qual.split(".", 1)) in {
-                (c, m) for c, m in ROOT_METHODS}:
-            roots.append((path, qual))
+        if "." in qual:
+            cls, meth = qual.split(".", 1)
+            if any(cls.endswith(c) and meth == m for c, m in ROOT_METHODS):
+                roots.append((path, qual))
     # registry-registered callables are dispatch targets of the scan
     for mod in tree.src_modules():
         imports = graph.imports[mod.path]

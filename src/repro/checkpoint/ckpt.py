@@ -116,7 +116,7 @@ def restore(ckpt_dir: str, like: Any, *, step: Optional[int] = None,
             specs, is_leaf=lambda x: isinstance(
                 x, jax.sharding.PartitionSpec))
         placed = [jax.device_put(v, NamedSharding(mesh, s))
-                  for v, s in zip(leaves, spec_leaves)]
+                  for v, s in zip(leaves, spec_leaves, strict=True)]
     else:
         placed = [jnp.asarray(v) for v in leaves]
     return jax.tree_util.tree_unflatten(treedef, placed), manifest

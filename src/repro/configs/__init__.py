@@ -5,17 +5,16 @@ from repro.configs.base import (ALL_SHAPES, DECODE_32K, LONG_500K, PREFILL_32K,
                                 TRAIN_4K, EncDecConfig, HybridConfig,
                                 ModelConfig, MoEConfig, ShapeConfig, SSMConfig,
                                 SwarmConfig, reduced, shape_applicable)
-
-from repro.configs.qwen3_moe_30b_a3b import CONFIG as _qwen3_moe
+from repro.configs.falcon_mamba_7b import CONFIG as _mamba
 from repro.configs.granite_moe_1b_a400m import CONFIG as _granite_moe
+from repro.configs.qwen2_5_14b import CONFIG as _qwen25_14b
+from repro.configs.qwen2_7b import CONFIG as _qwen2_7b
+from repro.configs.qwen2_vl_2b import CONFIG as _qwen2_vl
 from repro.configs.qwen3_1_7b import CONFIG as _qwen3_17
 from repro.configs.qwen3_4b import CONFIG as _qwen3_4b
-from repro.configs.qwen2_7b import CONFIG as _qwen2_7b
-from repro.configs.qwen2_5_14b import CONFIG as _qwen25_14b
+from repro.configs.qwen3_moe_30b_a3b import CONFIG as _qwen3_moe
 from repro.configs.recurrentgemma_9b import CONFIG as _rgemma
-from repro.configs.qwen2_vl_2b import CONFIG as _qwen2_vl
 from repro.configs.whisper_medium import CONFIG as _whisper
-from repro.configs.falcon_mamba_7b import CONFIG as _mamba
 
 ARCHS = {
     c.name: c for c in (
@@ -31,14 +30,14 @@ def get_config(arch_id: str) -> ModelConfig:
     try:
         return ARCHS[arch_id]
     except KeyError:
-        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(ARCHS)}")
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(ARCHS)}") from None
 
 
 def get_shape(shape_id: str) -> ShapeConfig:
     try:
         return SHAPES[shape_id]
     except KeyError:
-        raise KeyError(f"unknown shape {shape_id!r}; known: {sorted(SHAPES)}")
+        raise KeyError(f"unknown shape {shape_id!r}; known: {sorted(SHAPES)}") from None
 
 
 __all__ = [

@@ -37,7 +37,9 @@ def transfer_decision(queued_gflops: jax.Array, phi: jax.Array,
     """
     U = utilization(queued_gflops, phi)                   # [N]
     cand = jnp.where(adj, U[None, :], BIG)                # [N, N]
-    k_star = jnp.argmin(cand, axis=1)                     # [N]
+    # index dtype pinned: argmin yields i64 under x64, and the strategy
+    # switch requires every branch to return the same target dtype (J002)
+    k_star = jnp.argmin(cand, axis=1).astype(jnp.int32)   # [N]
     U_star = jnp.min(cand, axis=1)                        # [N]
     has_nbr = jnp.any(adj, axis=1)
     do = has_nbr & ((U - U_star) > gamma)                 # Eq. 13

@@ -35,7 +35,10 @@ def congestion_update(state: CongestionState, T: jax.Array, dt: float,
 
 def exit_label(D: jax.Array, tau_med: float, tau_high: float) -> jax.Array:
     """Eq. 16 → {0: L_full, 1: L1 (medium), 2: L2 (high)} per node."""
-    return jnp.where(D > tau_high, 2, jnp.where(D > tau_med, 1, 0))
+    # i32 pin: python-int leaves widen to i64 under x64 and the label
+    # feeds i32 scan-carry fields (swarmlint J002)
+    return jnp.where(D > tau_high, 2,
+                     jnp.where(D > tau_med, 1, 0)).astype(jnp.int32)
 
 
 def exit_boundary_layers(label: jax.Array, exit_points: Tuple[int, int, int],
@@ -54,14 +57,18 @@ def exit_boundary_layers(label: jax.Array, exit_points: Tuple[int, int, int],
     never push past the full network.
     """
     L1, L2, L_full = exit_points
-    med = jnp.minimum(L2 + finalize_layers, L_full)
-    high = jnp.minimum(L1 + finalize_layers, L_full)
-    return jnp.where(label == 2, high, jnp.where(label == 1, med, L_full))
+    med = min(L2 + finalize_layers, L_full)     # python ints: J002-safe
+    high = min(L1 + finalize_layers, L_full)
+    return jnp.where(label == 2, high,
+                     jnp.where(label == 1, med, L_full)).astype(jnp.int32)
 
 
 def exit_accuracy(label: jax.Array, accuracy_levels: Tuple[float, float, float]
                   ) -> jax.Array:
     """Table 2: [0.6, 0.9, 0.95] for [high-congestion, medium, full]."""
     acc_high, acc_med, acc_full = accuracy_levels
+    # pinned f32: python-scalar leaves are weak f64 under x64 and would
+    # promote the accuracy accumulator's scan carry (swarmlint J002)
     return jnp.where(label == 2, acc_high,
-                     jnp.where(label == 1, acc_med, acc_full))
+                     jnp.where(label == 1, acc_med,
+                               acc_full)).astype(jnp.float32)

@@ -170,7 +170,7 @@ def _sys_gauges(sys_buf) -> Dict[str, float]:
     s = np.asarray(sys_buf, np.float64)
     if s.ndim == 2:
         s = s[None]
-    g = dict(zip(schema.SYS_GAUGES, s[:, -1, :].mean(axis=0)))
+    g = dict(zip(schema.SYS_GAUGES, s[:, -1, :].mean(axis=0), strict=True))
     return {"queue_depth_mean": round(g["queue_depth_mean"], 3),
             "queue_depth_max": round(g["queue_depth_max"], 3),
             "phi_spread": round(g["phi_max"] - g["phi_min"], 3),

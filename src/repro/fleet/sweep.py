@@ -93,11 +93,12 @@ class SweepSpec:
     seed: int = 0
 
     @classmethod
-    def build(cls, name: str, base: SwarmConfig = SwarmConfig(), *,
+    def build(cls, name: str, base: SwarmConfig | None = None, *,
               axes: Mapping[str, Sequence[Any]] | None = None,
               strategies: Sequence[int] = (4,), num_runs: int = 16,
               seed: int = 0) -> "SweepSpec":
         """Normalizing constructor: accepts a mapping/sequences for axes."""
+        base = SwarmConfig() if base is None else base
         ax = tuple((k, tuple(v)) for k, v in (axes or {}).items())
         return cls(name=name, base=base, axes=ax,
                    strategies=tuple(int(s) for s in strategies),
@@ -109,7 +110,7 @@ class SweepSpec:
         points = []
         for combo in itertools.product(*axis_cells) if axis_cells else [()]:
             coords, overrides = [], {}
-            for axis, cell in zip(axis_names, combo):
+            for axis, cell in zip(axis_names, combo, strict=True):
                 coord, ov = _apply_axis(axis, cell)
                 coords.append((axis, coord))
                 overrides.update(ov)

@@ -47,7 +47,7 @@ def main():
     # submit/step share the engine's deterministic epoch clock, so the
     # reported latency is in epoch time (requests × steps), reproducible
     # run-to-run; wall time below is only for throughput
-    for r in range(args.requests):
+    for _ in range(args.requests):
         key, k = jax.random.split(key)
         toks = jax.random.randint(k, (args.batch, args.seq), 0,
                                   cfg.vocab_size)

@@ -146,7 +146,7 @@ def unrolled_scan(body, carry, xs, length: Optional[int] = None):
         length = jax.tree.leaves(xs)[0].shape[0]
     ys = []
     for i in range(length):
-        xsl = None if xs is None else jax.tree.map(lambda a: a[i], xs)
+        xsl = None if xs is None else jax.tree.map(lambda a, i=i: a[i], xs)
         carry, y = body(carry, xsl)
         ys.append(y)
     if not ys or all(l is None for l in jax.tree.leaves(

@@ -11,7 +11,6 @@ tractable: the decode cache is O(window + lru_width), not O(S).
 """
 from __future__ import annotations
 
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P

@@ -13,7 +13,6 @@ blocks align with the 16-way 'model' sharding of the width dimension.
 """
 from __future__ import annotations
 
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P

@@ -19,7 +19,6 @@ import dataclasses
 import time
 from typing import Any, Callable, Dict, Optional
 
-
 from repro.checkpoint import latest_step, restore, save
 
 

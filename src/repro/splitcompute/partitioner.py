@@ -18,12 +18,11 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Sequence, Tuple
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.diffusive import phi_fixpoint
-
-import jax.numpy as jnp
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,10 +75,10 @@ def plan_stages(cfg: ModelConfig, F: Sequence[float],
     for b in raw:
         # snap to the nearest legal split point >= previous bound
         cand = min((p for p in legal if p >= bounds[-1]),
-                   key=lambda p: abs(p - int(b)), default=L)
-        cand = min((p for p in legal), key=lambda p: (abs(p - int(b))
-                                                      if p > bounds[-1]
-                                                      else 10**9))
+                   key=lambda p, b=b: abs(p - int(b)), default=L)
+        cand = min((p for p in legal), key=lambda p, b=b: (abs(p - int(b))
+                                                           if p > bounds[-1]
+                                                           else 10**9))
         bounds.append(max(cand, bounds[-1]))
     bounds[-1] = L
     # dedupe while preserving monotonicity

@@ -11,6 +11,8 @@ deterministic models ignore it) and is selected by name through
 """
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 
@@ -33,7 +35,12 @@ def two_ray_pathloss_db(dist_m: jax.Array, h_tx: float, h_rx: float
     """Two-ray ground-reflection model (Rappaport §4.6), far-field form:
     PL(dB) = 40 log10(d) - 20 log10(h_t·h_r)."""
     d = jnp.maximum(dist_m, 1.0)
-    return 40.0 * jnp.log10(d) - 20.0 * jnp.log10(h_tx * h_rx)
+    # constant term pinned f32: jnp.log10(python float) is a *strong* f64
+    # under x64 and would promote the whole pathloss chain (swarmlint
+    # J002).  Pinning — not a host-side math.log10 — keeps the constant
+    # bit-identical to the historical f32 computation; the sparse/dense
+    # capacity parity tests are sensitive to a 1-ulp shift here.
+    return 40.0 * jnp.log10(d) - 20.0 * jnp.log10(jnp.float32(h_tx * h_rx))
 
 
 def two_ray(key, dist_m: jax.Array, cfg: SwarmConfig) -> jax.Array:
@@ -43,8 +50,10 @@ def two_ray(key, dist_m: jax.Array, cfg: SwarmConfig) -> jax.Array:
 
 def _fspl_1m_db(cfg: SwarmConfig) -> jax.Array:
     """Friis free-space loss at the 1 m reference distance:
-    20 log10(f) - 147.55 (c = 3e8, isotropic antennas)."""
-    return 20.0 * jnp.log10(cfg.carrier_hz) - 147.55
+    20 log10(f) - 147.55 (c = 3e8, isotropic antennas).  f32-pinned so it
+    never sets the chain dtype under x64 (swarmlint J002) while staying
+    bit-identical to the historical f32 computation."""
+    return 20.0 * jnp.log10(jnp.float32(cfg.carrier_hz)) - 147.55
 
 
 def free_space(key, dist_m: jax.Array, cfg: SwarmConfig) -> jax.Array:
@@ -105,7 +114,8 @@ def log_normal_corr(key, dist_m: jax.Array, cfg: SwarmConfig) -> jax.Array:
     chol = jnp.linalg.cholesky(rho + 1e-4 * jnp.eye(n, dtype=rho.dtype))
     z = chol @ jax.random.normal(key, (n,), jnp.float32)
     x = (z[:, None] + z[None, :]) / jnp.sqrt(2.0 * (1.0 + rho))
-    return base + cfg.shadowing_sigma_db * x * (1.0 - jnp.eye(n))
+    return base + cfg.shadowing_sigma_db * x * (1.0 - jnp.eye(
+        n, dtype=x.dtype))   # dtype-pinned eye: default is f64 under x64
 
 
 def rician(key, dist_m: jax.Array, cfg: SwarmConfig) -> jax.Array:
@@ -120,11 +130,11 @@ def rician(key, dist_m: jax.Array, cfg: SwarmConfig) -> jax.Array:
     """
     base = _log_distance_db(dist_m, cfg)
     n = dist_m.shape[-1]
-    K = jnp.power(10.0, cfg.rician_k_db / 10.0)
+    K = 10.0 ** (cfg.rician_k_db / 10.0)       # python: weak, J002-safe
     kx, ky = jax.random.split(key)
-    s = jnp.sqrt(1.0 / (2.0 * (K + 1.0)))
-    x = jnp.sqrt(K / (K + 1.0)) + s * jax.random.normal(kx, (n, n),
-                                                        jnp.float32)
+    s = math.sqrt(1.0 / (2.0 * (K + 1.0)))
+    x = math.sqrt(K / (K + 1.0)) + s * jax.random.normal(kx, (n, n),
+                                                         jnp.float32)
     y = s * jax.random.normal(ky, (n, n), jnp.float32)
     g = _mirror_gain(x * x + y * y)
     return base - 10.0 * jnp.log10(jnp.maximum(g, 1e-12))
@@ -205,10 +215,10 @@ def log_normal_edges(key, dist_m, src, dst, cfg: SwarmConfig) -> jax.Array:
 
 def rician_edges(key, dist_m, src, dst, cfg: SwarmConfig) -> jax.Array:
     base = _log_distance_db(dist_m, cfg)
-    K = jnp.power(10.0, cfg.rician_k_db / 10.0)
-    s = jnp.sqrt(1.0 / (2.0 * (K + 1.0)))
+    K = 10.0 ** (cfg.rician_k_db / 10.0)       # python: weak, J002-safe
+    s = math.sqrt(1.0 / (2.0 * (K + 1.0)))
     z = _edge_normal(key, src, dst, draws=2)
-    x = jnp.sqrt(K / (K + 1.0)) + s * z[..., 0]
+    x = math.sqrt(K / (K + 1.0)) + s * z[..., 0]
     y = s * z[..., 1]
     g = x * x + y * y
     return base - 10.0 * jnp.log10(jnp.maximum(g, 1e-12))

@@ -43,7 +43,10 @@ def init_mobility(key, cfg: SwarmConfig, n: int):
     jitter = jax.random.uniform(kj, (n, 2), jnp.float32, 0.25, 0.75)
     center = (idx.astype(jnp.float32) + jitter) * cell
     phase0 = jax.random.uniform(kp, (n,), jnp.float32, 0.0, 2.0 * jnp.pi)
-    omega = jnp.full((n,), cfg.speed_mps / cfg.movement_radius_m)
+    # f32 pin: default-dtype full is f64 under x64 and would drift the
+    # mobility-state scan carry (swarmlint J002)
+    omega = jnp.full((n,), cfg.speed_mps / cfg.movement_radius_m,
+                     jnp.float32)
     return {"center": center, "phase0": phase0, "omega": omega}
 
 
@@ -155,7 +158,7 @@ def step_gauss_markov(state, key, cfg: SwarmConfig, t0):
     a = cfg.gm_alpha
     w = jax.random.normal(key, state["vel"].shape, jnp.float32)
     vel = (a * state["vel"] + (1.0 - a) * state["mean_vel"]
-           + cfg.gm_sigma_mps * jnp.sqrt(1.0 - a * a) * w)
+           + cfg.gm_sigma_mps * (1.0 - a * a) ** 0.5 * w)
     # epoch-start contract: no advance (and no AR velocity step) at t0 = 0
     vel = jnp.where(t0 > 0.0, vel, state["vel"])
     pos = state["pos"] + vel * jnp.where(t0 > 0.0, dt, 0.0)

@@ -149,12 +149,15 @@ def neighbor_lists(pos: jax.Array, cfg: SwarmConfig, k: int | None = None
     ok &= d2 <= jnp.float32(r * r)                 # candidate-radius cut
     score = jnp.where(ok, d2, jnp.inf)
     neg_d2, sel = jax.lax.top_k(-score, k)         # k smallest distances
+    # oob: `sel` comes from top_k over the candidate axis, always
+    # in-range; fill mode is take_along_axis's default (J003)
     nbr = jnp.take_along_axis(cand, sel, axis=1)
     valid = neg_d2 > -jnp.inf
     # canonical ascending-id order (invalid slots last): argmin/argmax
     # tie-breaks over the K axis then match dense lowest-index-wins
     key = jnp.where(valid, nbr, n)
     perm = jnp.argsort(key, axis=1)
+    # oob: `perm` is an argsort permutation, in-range by construction
     nbr = jnp.take_along_axis(nbr, perm, axis=1)
     valid = jnp.take_along_axis(valid, perm, axis=1)
     return jnp.where(valid, nbr, 0).astype(jnp.int32), valid

@@ -92,8 +92,11 @@ def init_state(key, cfg: SwarmConfig, n: int) -> Dict:
         "xi_label": jnp.zeros((n,), jnp.int32),
         # Markov-modulated arrival chain (bursty workload, Fig. 1)
         "burst_on": jnp.zeros((n,), bool),
-        # metric accumulators
-        "done_count": jnp.float32(0), "lat_sum": jnp.float32(0),
+        # metric accumulators; event *counts* carry as i32 — integer
+        # accumulation is exact under any reduction order, so the in-scan
+        # cross-node count sums stay bit-identical across the executor
+        # backends' different batchings (swarmlint J001, DESIGN.md §8.2)
+        "done_count": jnp.int32(0), "lat_sum": jnp.float32(0),
         "acc_sum": jnp.float32(0), "proc_gflops": jnp.zeros((n,), jnp.float32),
         # energy accrues per node, not as a swarm scalar: elementwise
         # accumulation is bit-identical under any batching (vmap, sharded,
@@ -101,9 +104,9 @@ def init_state(key, cfg: SwarmConfig, n: int) -> Dict:
         # with the batch shape and breaks backend parity at the ulp level
         "e_comp": jnp.zeros((n,), jnp.float32),
         "e_tx": jnp.zeros((n,), jnp.float32),
-        "tx_count": jnp.float32(0), "tx_delivered": jnp.float32(0),
+        "tx_count": jnp.int32(0), "tx_delivered": jnp.int32(0),
         "tx_time_sum": jnp.float32(0),
-        "drop_count": jnp.float32(0), "gen_count": jnp.float32(0),
+        "drop_count": jnp.int32(0), "gen_count": jnp.int32(0),
         # per-task + per-hop telemetry (repro.trace): {} when the
         # capacities are 0, so the untraced state pytree — and every
         # number downstream — is exactly the historical one
@@ -133,16 +136,23 @@ def _compute_pass(st, budget, targets_cum, t_now, cfg: SwarmConfig):
     acc = exit_accuracy(st["xi_label"], cfg.exit_accuracy)
 
     st = dict(st)
+    # oob: `head` is queues.head_slot's argmin, always in [0, Q); drop
+    # mode is the .at[] default, never exercised (J003)
     st["q_cum"] = st["q_cum"].at[rows, head].set(
         jnp.where(has, new_cum, st["q_cum"][rows, head]))
     st["proc_gflops"] = st["proc_gflops"] + adv
     st["e_comp"] = st["e_comp"] + adv * eJ
-    st["done_count"] = st["done_count"] + jnp.sum(completed)
+    # dtype-pinned i32 count (bool sums widen to i64 under x64 — J002)
+    st["done_count"] = st["done_count"] + jnp.sum(completed,
+                                                  dtype=jnp.int32)
     st["lat_sum"] = st["lat_sum"] + jnp.sum(jnp.where(completed, lat, 0.0))
     st["acc_sum"] = st["acc_sum"] + jnp.sum(jnp.where(completed, acc, 0.0))
+    # oob: in-range `head` (argmin), see the q_cum scatter above (J003)
     st["q_active"] = st["q_active"].at[rows, head].set(
         jnp.where(completed, False, st["q_active"][rows, head]))
     if trace_record.enabled(cfg):
+        # oob: in-range `head` (argmin); add-where-inactive is masked by
+        # adv == 0 on empty queues (J003)
         st["q_energy"] = st["q_energy"].at[rows, head].add(adv * eJ)
         st = trace_record.write_records(
             st, completed, seq=st["q_seq"][rows, head],
@@ -166,13 +176,14 @@ def _tick(st, key, cfg: SwarmConfig, profile: TaskProfile, cap, alive,
     arrive = arrive & alive
     if trace_record.enabled(cfg):
         st = trace_record.traced_push(
-            st, arrive, jnp.zeros((n,)), jnp.full((n,), t_now),
-            jnp.zeros((n, n), bool), src=jnp.arange(n), energy=0.0,
+            st, arrive, jnp.zeros((n,), jnp.float32),
+            jnp.full((n,), t_now), jnp.zeros((n, n), bool),
+            src=jnp.arange(n), energy=0.0,
             txtime=0.0, t_now=t_now, cfg=cfg)
     else:
-        st = push(st, arrive, jnp.zeros((n,)), jnp.full((n,), t_now),
-                  jnp.zeros((n, n), bool))
-    st["gen_count"] = st["gen_count"] + jnp.sum(arrive.astype(jnp.float32))
+        st = push(st, arrive, jnp.zeros((n,), jnp.float32),
+                  jnp.full((n,), t_now), jnp.zeros((n, n), bool))
+    st["gen_count"] = st["gen_count"] + jnp.sum(arrive, dtype=jnp.int32)
 
     # (b) compute (budget cascade x2: finish a task and start the next;
     #     down nodes hold their queues but burn no cycles)
@@ -206,7 +217,9 @@ def _strategy_decision(st, strategy, adj, d_tx, T, key, cfg: SwarmConfig):
 
     # ---- Greedy: least instantaneous load, w.p. p_greedy -----------------
     cand = jnp.where(adj, T[None, :], BIG)
-    g_tgt = jnp.argmin(cand, axis=1)
+    # target dtypes pinned to i32: argmin/argmax are i64 under x64 and the
+    # strategy switch needs branch-identical avals (swarmlint J002)
+    g_tgt = jnp.argmin(cand, axis=1).astype(jnp.int32)
     g_less = jnp.min(cand, axis=1) < T
     g_do = (jax.random.bernoulli(k1, cfg.greedy_offload_p, (n,))
             & has_nbr & g_less)
@@ -217,7 +230,7 @@ def _strategy_decision(st, strategy, adj, d_tx, T, key, cfg: SwarmConfig):
     # threefry counters would make coin u_j bit-identical to a target score
     # for j, correlating "who offloads" with "who gets picked"
     gum = jax.random.gumbel(k2, (n, n))
-    r_tgt = jnp.argmax(jnp.where(adj, gum, -BIG), axis=1)
+    r_tgt = jnp.argmax(jnp.where(adj, gum, -BIG), axis=1).astype(jnp.int32)
     r_do = jax.random.bernoulli(jax.random.fold_in(k2, 1),
                                 cfg.random_offload_p, (n,)) & has_nbr
     random_ = (r_do, r_tgt)
@@ -227,7 +240,7 @@ def _strategy_decision(st, strategy, adj, d_tx, T, key, cfg: SwarmConfig):
     amask = adj & ~visited_head
     a_has = jnp.any(amask, axis=1)
     a_tgt = jnp.argmax(jnp.where(amask, jax.random.gumbel(k3, (n, n)), -BIG),
-                       axis=1)
+                       axis=1).astype(jnp.int32)
     a_do = jax.random.bernoulli(jax.random.fold_in(k3, 1),
                                 cfg.random_acyclic_p, (n,)) & a_has
     acyc = (a_do, a_tgt)
@@ -411,14 +424,18 @@ def run_sim(key, cfg: SwarmConfig, strategy, n: int | None = None) -> Dict:
 
 
 def summarize(st, cfg: SwarmConfig, profile: TaskProfile) -> Dict:
-    done = jnp.maximum(st["done_count"], 1.0)
+    # the i32 event counters re-enter float land here, outside the scan:
+    # counts are exact in f32 up to 2^24, so every reported metric is
+    # bit-identical to the historical f32-accumulator values
+    done_f = st["done_count"].astype(jnp.float32)
+    done = jnp.maximum(done_f, 1.0)
     rem_q = queued_gflops(st, profile)
     rem_tx = jnp.where(st["tx_active"],
                        profile.total_gflops - st["tx_cum"], 0.0)
     # Jain fairness over capability-normalized processed GFLOPs (Fig. 4d)
     x = st["proc_gflops"] / st["F"]
     jain = (jnp.sum(x) ** 2) / (x.shape[0] * jnp.sum(x * x) + 1e-12)
-    tps = st["done_count"] / cfg.sim_time_s
+    tps = done_f / cfg.sim_time_s
     acc = st["acc_sum"] / done
     # single cross-node reduction, outside the scan (see init_state note)
     e_total = jnp.sum(st["e_comp"] + st["e_tx"])
@@ -426,21 +443,22 @@ def summarize(st, cfg: SwarmConfig, profile: TaskProfile) -> Dict:
     al = st["lat_sum"] / done
     fom = tps * acc / jnp.maximum(ae * al, 1e-12)
     out = {
-        "completed": st["done_count"], "generated": st["gen_count"],
+        "completed": done_f,
+        "generated": st["gen_count"].astype(jnp.float32),
         "avg_latency_s": al, "avg_accuracy": acc,
         "remaining_gflops": jnp.sum(rem_q) + jnp.sum(rem_tx),
         # mean over *delivered* transfers: tx_time_sum only accumulates at
         # delivery, so dividing by initiations (tx_count) would bias the
         # mean low whenever transfers are still in flight at sim end
         "avg_transfer_time_s": st["tx_time_sum"]
-        / jnp.maximum(st["tx_delivered"], 1.0),
-        "transfers": st["tx_count"],
-        "transfers_delivered": st["tx_delivered"],
+        / jnp.maximum(st["tx_delivered"].astype(jnp.float32), 1.0),
+        "transfers": st["tx_count"].astype(jnp.float32),
+        "transfers_delivered": st["tx_delivered"].astype(jnp.float32),
         "jain_fairness": jain,
         "energy_per_task_j": ae,
         "energy_total_j": e_total,
         "throughput_tps": tps,
-        "dropped": st["drop_count"],
+        "dropped": st["drop_count"].astype(jnp.float32),
         "fom": fom,
     }
     if trace_record.enabled(cfg):

@@ -42,10 +42,13 @@ def initiate(st, elig, tgt, t0, profile: TaskProfile):
             st[f"tx_{f}"] = jnp.where(elig, st[f"q_{f}"][rows, head],
                                       st[f"tx_{f}"])
     if "hop_seq" in st:      # hop stream: assign seqs at initiation (§10.5)
-        hseq = st["hop_counter"] + jnp.cumsum(elig.astype(jnp.int32)) - 1
+        # i32-pinned reductions: numpy-style widening to i64 under x64
+        # would drift the hop-seq carry dtype (swarmlint J002)
+        hseq = st["hop_counter"] + jnp.cumsum(
+            elig.astype(jnp.int32), dtype=jnp.int32) - 1
         st["hop_seq"] = jnp.where(elig, hseq, st["hop_seq"])
         st["hop_counter"] = st["hop_counter"] + jnp.sum(
-            elig.astype(jnp.int32))
+            elig.astype(jnp.int32), dtype=jnp.int32)
         st["hop_bits"] = jnp.where(elig, bits, st["hop_bits"])
         st["hop_layer"] = jnp.where(
             elig, jnp.clip(layer_of(profile, cum_h), 0,
@@ -61,7 +64,9 @@ def initiate(st, elig, tgt, t0, profile: TaskProfile):
                                  st["q_visited"][rows, head],
                                  st["tx_visited"])
     st["tx_start"] = jnp.where(elig, t0, st["tx_start"])
-    st["tx_count"] = st["tx_count"] + jnp.sum(elig.astype(jnp.float32))
+    # i32 count: exact under any reduction order, so the in-scan sum
+    # cannot drift across executor backends (swarmlint J001, §8.2)
+    st["tx_count"] = st["tx_count"] + jnp.sum(elig, dtype=jnp.int32)
     st["tx_active"] = st["tx_active"] | elig
     return pop_head(st, elig)
 
@@ -78,7 +83,9 @@ def progress(st, cap, alive, cfg: SwarmConfig, t_now):
     stalls (bits conserved) and resumes when the node recovers.
     """
     n = st["F"].shape[0]
-    rows = jnp.arange(n)
+    # i32 pin: the origin ranks scatter into i32 contention fields, and
+    # default arange/full are i64 under x64 (swarmlint J002)
+    rows = jnp.arange(n, dtype=jnp.int32)
     tick = cfg.tick_s
     rate = cap if cap.ndim == 1 else cap[rows, st["tx_dst"]]  # bit/s
     live = alive & alive[st["tx_dst"]]
@@ -101,12 +108,16 @@ def progress(st, cap, alive, cfg: SwarmConfig, t_now):
     arrived = active & (st["tx_bits"] <= 0.0)
     # receiver contention: lowest-index origin wins per destination
     origin_rank = jnp.where(arrived, rows, INT_MAX)
-    winner = jnp.full((n,), INT_MAX).at[st["tx_dst"]].min(
+    # oob: tx_dst holds node ids from the decision stage, always in
+    # [0, N); drop mode is the .at[] default, never exercised (J003)
+    winner = jnp.full((n,), INT_MAX, jnp.int32).at[st["tx_dst"]].min(
         jnp.where(arrived, origin_rank, INT_MAX))
     deliver = arrived & (winner[st["tx_dst"]] == rows)
 
+    # oob: in-range tx_dst, see winner scatter above (J003)
     dst_mask = jnp.zeros((n,), bool).at[st["tx_dst"]].max(deliver)
     # scatter in-flight fields to destination rows
+    # oob: in-range tx_dst, see winner scatter above (J003)
     inv = jnp.full((n,), 0, jnp.int32).at[st["tx_dst"]].max(
         jnp.where(deliver, rows, 0))                        # origin per dst
     cum_d = st["tx_cum"][inv]
@@ -128,8 +139,10 @@ def progress(st, cap, alive, cfg: SwarmConfig, t_now):
     else:
         st = push(st, dst_mask, cum_d, created_d, visited_d)
     st["tx_active"] = st["tx_active"] & ~deliver
-    st["tx_delivered"] = st["tx_delivered"] + jnp.sum(
-        deliver.astype(jnp.float32))
+    # i32 count (see tx_count in initiate); tx_time_sum below stays a
+    # float accumulator and is baselined under J001 with its rationale
+    st["tx_delivered"] = st["tx_delivered"] + jnp.sum(deliver,
+                                                      dtype=jnp.int32)
     st["tx_time_sum"] = st["tx_time_sum"] + jnp.sum(
         jnp.where(deliver, t_now - st["tx_start"], 0.0))
     return st

@@ -34,13 +34,13 @@ defaults 0 no trace state exists anywhere and the simulator is
 bit-identical to an untraced build.
 """
 from repro.trace import schema
-from repro.trace.critical import (SEGMENTS, attribute, decompose,
-                                  hop_stall_fraction, segment_indices)
 from repro.trace.aggregate import (exit_label_histogram, hop_airtime_s,
                                    hop_energy_j, hop_histogram, hop_indices,
                                    int_histogram, jain_fairness, link_bits,
                                    link_energy_j, quantile_summary,
                                    state_indices, trace_indices)
+from repro.trace.critical import (SEGMENTS, attribute, decompose,
+                                  hop_stall_fraction, segment_indices)
 from repro.trace.decode import decode, decode_hops, decode_state, split_runs
 from repro.trace.export import (chrome_trace_events, hop_trace_events,
                                 state_counter_events, write_chrome_trace)

@@ -51,7 +51,7 @@ def int_histogram(col) -> Dict[str, int]:
     """Value → count histogram of an integral column, string-keyed for
     JSON (the one histogram implementation every surface shares)."""
     vals, counts = np.unique(np.asarray(col, np.int64), return_counts=True)
-    return {str(int(v)): int(c) for v, c in zip(vals, counts)}
+    return {str(int(v)): int(c) for v, c in zip(vals, counts, strict=True)}
 
 
 def hop_histogram(dec: Mapping) -> Dict[str, int]:
@@ -187,7 +187,7 @@ def _link_sums(hdec: Mapping, weights) -> Dict[str, float]:
     uniq, inv = np.unique(src * n + dst, return_inverse=True)
     sums = np.bincount(inv, weights=np.asarray(weights, np.float64))
     return {f"{int(k // n)}->{int(k % n)}": float(s)
-            for k, s in zip(uniq, sums)}
+            for k, s in zip(uniq, sums, strict=True)}
 
 
 def link_bits(hdec: Mapping) -> Dict[str, float]:

@@ -120,4 +120,4 @@ def split_runs(records, overflow=None, hops: bool = False):
     ovf = (np.zeros((rec.shape[0],)) if overflow is None
            else np.asarray(overflow).reshape(rec.shape[0]))
     fn = decode_hops if hops else decode
-    return [fn(r, o) for r, o in zip(rec, ovf)]
+    return [fn(r, o) for r, o in zip(rec, ovf, strict=True)]

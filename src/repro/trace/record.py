@@ -162,10 +162,13 @@ def write_state(st, epoch_idx, t_end, cfg: SwarmConfig):
          jnp.sum(st["e_comp"] + st["e_tx"])]).astype(jnp.float32)
 
     st = dict(st)
+    # oob: drop is load-bearing — non-capture epochs target slot==capacity
+    # on purpose, so the scatter is the stride filter itself (J003)
     st["trace_state"] = st["trace_state"].at[slot].set(
         node_rows, mode="drop")
     st["trace_state_sys"] = st["trace_state_sys"].at[slot].set(
         sys_row, mode="drop")
+    # oob: same deliberate slot==capacity drop as above (J003)
     st["trace_state_epochs"] = st["trace_state_epochs"].at[slot].set(
         epoch_idx.astype(jnp.float32), mode="drop")
     return st
@@ -181,6 +184,8 @@ def _scatter_records(st, key_records, key_overflow, mask, seq, rows):
     cap = st[key_records].shape[0]
     slot = jnp.where(mask, seq, cap)
     st = dict(st)
+    # oob: drop is load-bearing — unmasked lanes and overflowed seqs
+    # target slot==capacity so they vanish deterministically (J003)
     st[key_records] = st[key_records].at[slot].set(rows, mode="drop")
     # saturate at int32 max instead of wrapping (clamp the increment to
     # the remaining headroom — int32-only, no x64 dependence)
@@ -225,10 +230,13 @@ def traced_push(st, mask, cum, created, visited, *, src, energy, txtime,
     st = push(st, mask, cum, created, visited,
               extras={"src": src, "energy": energy, "txtime": txtime})
     # seqs for the drops, after push consumed the accepted tasks' seqs
-    drop_seq = st["seq_counter"] + jnp.cumsum(dropped.astype(jnp.int32)) - 1
+    # (i32-pinned reductions: numpy-style widening under x64 would drift
+    # the seq-counter carry dtype — swarmlint J002)
+    drop_seq = st["seq_counter"] + jnp.cumsum(
+        dropped.astype(jnp.int32), dtype=jnp.int32) - 1
     st = dict(st)
     st["seq_counter"] = st["seq_counter"] + jnp.sum(
-        dropped.astype(jnp.int32))
+        dropped.astype(jnp.int32), dtype=jnp.int32)
     return write_records(
         st, dropped, seq=drop_seq, src=src, dst=jnp.arange(n),
         created_t=created, completed_t=t_now,

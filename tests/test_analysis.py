@@ -46,8 +46,15 @@ def test_repo_tree_is_clean():
 def test_repo_baseline_entries_all_fire():
     """Every [[allow]] entry must still match a live finding: an entry
     whose finding is gone is dead weight that would mask a future
-    regression at the same (rule, file, symbol)."""
-    raw = run(REPO, use_baseline=False)
+    regression at the same (rule, file, symbol).  Runs tier *all*: the
+    baseline carries J entries too, and an ast-only raw run would report
+    them stale (jaxpr findings are invisible to it)."""
+    try:
+        import jax  # noqa: F401
+    except Exception:                                # pragma: no cover
+        pytest.skip("jax not installed: J-rule baseline entries "
+                    "cannot be validated")
+    raw = run(REPO, use_baseline=False, tier="all")
     live = {(f.rule, f.file, f.symbol) for f in raw}
     from repro.analysis.baseline import load_baseline
     bl = load_baseline(REPO)

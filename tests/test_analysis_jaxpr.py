@@ -1,0 +1,530 @@
+"""Tier-2 swarmlint (jaxpr rules J001–J005): mutation tests, fingerprint
+semantics, SARIF emission, baseline pruning, and the CLI tier contract.
+
+The J rules lint whatever ``targets.py`` traces — the *real* installed
+``repro`` package — so the fixture-mini-repo pattern of tier 1 does not
+transplant: a fixture tree cannot change what the registry imports.
+Mutation tests instead: each rule gets a small local program carrying
+exactly the defect (TP) and its closest correct idiom (TN), traced
+through the same :func:`trace32_64` / :class:`TracedTarget` path the
+registry uses, and fed to the rule function directly.  That proves the
+rule *fires* (ISSUE acceptance: in-scan ``jnp.sum`` over N → J001,
+``.astype("float64")`` → J002, leaked static arg → J005) independent of
+the repo tree being clean.
+"""
+import importlib.util
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.analysis import JAXPR_RULE_IDS, RULE_DOCS, run
+from repro.analysis.astutil import Finding
+from repro.analysis.baseline import parse_baseline, prune_baseline_text
+from repro.analysis.sarif import SARIF_VERSION, to_sarif
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+FIXTURES = os.path.join(REPO, "tests", "analysis_fixtures")
+
+try:
+    import jax
+    import jax.numpy as jnp
+    HAVE_JAX = True
+except Exception:                                    # pragma: no cover
+    HAVE_JAX = False
+
+needs_jax = pytest.mark.skipif(not HAVE_JAX, reason="jax not installed")
+
+if HAVE_JAX:
+    from repro.analysis.jaxpr import fingerprint as fpmod
+    from repro.analysis.jaxpr.fingerprint import (check_j005, fingerprint_fn,
+                                                  group_fingerprints,
+                                                  structural_signature,
+                                                  sweep_fingerprint_table)
+    from repro.analysis.jaxpr.jaxpr_util import trace32_64
+    from repro.analysis.jaxpr.rules import (check_j001, check_j002,
+                                            check_j003, check_j004)
+    from repro.analysis.jaxpr.targets import TARGET_N, Target, TracedTarget
+
+
+def _traced(fn, args, name="mut", n_axis=None):
+    """Trace one local program through the registry's exact path and wrap
+    it the way ``trace_targets`` would — the rules' input contract."""
+    if n_axis is None:
+        n_axis = TARGET_N
+    t = Target(name, "sim", lambda: (fn, args), n_axis=n_axis)
+    j32, j64, err = trace32_64(fn, *args)
+    return {name: TracedTarget(t, j32, j64, err)}
+
+
+def _cli(*argv, cwd=REPO):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *argv],
+        capture_output=True, text=True, cwd=cwd, env=env)
+
+
+# ---------------------------------------------------------------------------
+# J001 — in-scan cross-node float reductions
+# ---------------------------------------------------------------------------
+
+
+@needs_jax
+def test_j001_true_positive_in_scan_float_sum():
+    """The ISSUE's canonical mutation: a float ``jnp.sum`` collapsing the
+    N axis inside a scan body must raise J001."""
+    def body(carry, x):                  # x: [N] float32
+        s = jnp.sum(x)                   # cross-node collapse, in scan
+        return carry + s, s
+
+    def fn(xs):
+        return jax.lax.scan(body, jnp.float32(0.0), xs)
+
+    xs = jnp.ones((5, TARGET_N), jnp.float32)
+    found = list(check_j001(_traced(fn, (xs,)), REPO))
+    assert len(found) == 1
+    f = found[0]
+    assert f.rule == "J001"
+    assert "reduce_sum" in f.message
+    assert "mut" in f.message            # names the target it traced via
+
+
+@needs_jax
+def test_j001_true_negative_exact_and_integer_reductions():
+    """max (exact in any association order) and integer sums are
+    whitelisted, and per-node [N, N] → [N] aggregations keep the axis."""
+    def body(carry, x):                  # x: [N, N] float32
+        per_node = jnp.sum(x, axis=1)    # keeps an N-sized output axis
+        worst = jnp.max(x)               # exact reduction
+        hits = jnp.sum((x > 0).astype(jnp.int32))   # integer accumulation
+        return carry, (per_node, worst, hits)
+
+    def fn(xs):
+        return jax.lax.scan(body, jnp.float32(0.0), xs)
+
+    xs = jnp.ones((3, TARGET_N, TARGET_N), jnp.float32)
+    assert list(check_j001(_traced(fn, (xs,)), REPO)) == []
+
+
+@needs_jax
+def test_j001_outside_scan_is_allowed():
+    """The same collapse *outside* the scan (summarize-style) is the
+    prescribed fix, not a finding."""
+    def fn(xs):
+        carry, ys = jax.lax.scan(
+            lambda c, x: (c + 1, x * 2.0), jnp.int32(0), xs)
+        return jnp.sum(ys)               # post-scan reduce: fine
+
+    xs = jnp.ones((4, TARGET_N), jnp.float32)
+    assert list(check_j001(_traced(fn, (xs,)), REPO)) == []
+
+
+@needs_jax
+def test_j001_skips_targets_without_n_axis():
+    """n_axis=None opts a target out (the executor wrappers)."""
+    def body(c, x):
+        return c + jnp.sum(x), jnp.sum(x)
+
+    def fn(xs):
+        return jax.lax.scan(body, jnp.float32(0.0), xs)
+
+    xs = jnp.ones((5, TARGET_N), jnp.float32)
+    traced = _traced(fn, (xs,))
+    traced["mut"].n_axis = None
+    assert list(check_j001(traced, REPO)) == []
+
+
+# ---------------------------------------------------------------------------
+# J002 — x32/x64 dtype drift
+# ---------------------------------------------------------------------------
+
+
+@needs_jax
+@pytest.mark.filterwarnings("ignore::UserWarning")   # the truncation warn
+def test_j002_true_positive_astype_float64():
+    """The ISSUE's canonical mutation: an ``astype("float64")`` literal
+    traces f32 under x32 but f64 under x64 — signature drift."""
+    def fn(x):
+        return x.astype("float64") * 2.0
+
+    found = list(check_j002(_traced(fn, (jnp.ones(3, jnp.float32),)), REPO))
+    assert any("dtype drift" in f.message for f in found)
+    assert all(f.rule == "J002" for f in found)
+
+
+@needs_jax
+def test_j002_true_positive_weak_output():
+    """A python scalar reaching the outputs is weak-typed — its dtype is
+    promotion-context-dependent."""
+    def fn(x):
+        return jnp.sum(x), 2.0 * 1.5     # second output: weak python float
+
+    found = list(check_j002(_traced(fn, (jnp.ones(3, jnp.float32),)), REPO))
+    assert any("weak-typed output" in f.message for f in found)
+
+
+@needs_jax
+def test_j002_true_negative_pinned_dtypes():
+    def fn(x):
+        return x * jnp.float32(2.0) + jnp.zeros((), jnp.float32)
+
+    assert list(check_j002(_traced(fn, (jnp.ones(3, jnp.float32),)),
+                           REPO)) == []
+
+
+# ---------------------------------------------------------------------------
+# J003 — masking-mode gather/scatter must carry an `# oob:` annotation
+# ---------------------------------------------------------------------------
+
+_J003_SRC = textwrap.dedent("""\
+    import jax.numpy as jnp
+
+
+    def unannotated(x, idx):
+        return x.at[idx].get(mode="clip")
+
+
+    def annotated(x, idx):
+        # oob: clip is deliberate — padded neighbor slots point past N
+        return x.at[idx].get(mode="clip")
+""")
+
+
+@needs_jax
+def _j003_traced(tmp_path, func_name):
+    """Materialize the J003 module under a ``src/repro/`` tree so the
+    traced equations anchor to repo-relative files (source_site maps on
+    the ``/src/repro/`` marker), then trace one of its functions."""
+    pkg = tmp_path / "src" / "repro"
+    pkg.mkdir(parents=True, exist_ok=True)
+    mod_path = pkg / "j003_mod.py"
+    mod_path.write_text(_J003_SRC)
+    spec = importlib.util.spec_from_file_location("j003_mod", str(mod_path))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    fn = getattr(mod, func_name)
+    args = (jnp.ones(TARGET_N, jnp.float32),
+            jnp.array([0, 5, 99], jnp.int32))
+    return _traced(fn, args, name=f"j003_{func_name}")
+
+
+@needs_jax
+def test_j003_true_positive_unannotated_clip(tmp_path):
+    found = list(check_j003(_j003_traced(tmp_path, "unannotated"),
+                            str(tmp_path)))
+    assert len(found) == 1
+    f = found[0]
+    assert f.rule == "J003"
+    assert f.file == os.path.join("src", "repro", "j003_mod.py")
+    assert f.line > 0                    # anchored to a real source line
+    assert "CLIP" in f.message
+
+
+@needs_jax
+def test_j003_true_negative_annotated_clip(tmp_path):
+    found = list(check_j003(_j003_traced(tmp_path, "annotated"),
+                            str(tmp_path)))
+    assert found == []
+
+
+# ---------------------------------------------------------------------------
+# J004 — closure-constant bloat
+# ---------------------------------------------------------------------------
+
+
+@needs_jax
+def test_j004_true_positive_big_closed_const():
+    big = jnp.zeros((600, 600), jnp.float32)      # 1.44 MB > 1 MiB cap
+
+    def fn(x):
+        return x + big[0, 0] + jnp.sum(big)
+
+    found = list(check_j004(_traced(fn, (jnp.ones(3, jnp.float32),)), REPO))
+    assert len(found) == 1
+    assert found[0].rule == "J004"
+    assert "closure-constant bloat" in found[0].message
+
+
+@needs_jax
+def test_j004_true_negative_small_consts():
+    small = jnp.zeros((TARGET_N,), jnp.float32)
+
+    def fn(x):
+        return x + jnp.sum(small)
+
+    assert list(check_j004(_traced(fn, (jnp.ones(3, jnp.float32),)),
+                           REPO)) == []
+
+
+# ---------------------------------------------------------------------------
+# J005 — compile-fingerprint stability
+# ---------------------------------------------------------------------------
+
+
+@needs_jax
+def test_fingerprint_abstracts_literal_values():
+    """Data differences must vanish: same program shape with different
+    literal values shares a fingerprint; a different shape does not."""
+    x = jnp.ones(3, jnp.float32)
+    fp_a = fingerprint_fn(lambda v: v * 2.0, x)
+    fp_b = fingerprint_fn(lambda v: v * 3.5, x)
+    fp_c = fingerprint_fn(lambda v: v * 2.0 + 1.0, x)
+    assert fp_a == fp_b
+    assert fp_a != fp_c
+
+
+@needs_jax
+def test_fingerprint_abstracts_closed_const_values():
+    a = jnp.arange(4, dtype=jnp.float32)
+    b = jnp.arange(4, dtype=jnp.float32) * 7.0
+    fp_a = fingerprint_fn(lambda v: v + a, jnp.ones(4, jnp.float32))
+    fp_b = fingerprint_fn(lambda v: v + b, jnp.ones(4, jnp.float32))
+    assert fp_a == fp_b
+
+
+@needs_jax
+def test_structural_signature_splits_data_from_structure():
+    from repro.configs.base import SwarmConfig
+    from repro.fleet.sweep import SweepSpec
+    base = SwarmConfig(num_workers=13, sim_time_s=1.0, num_runs=2)
+    spec = SweepSpec.build("sig", base, axes={"gamma": (0.01, 0.05)},
+                           strategies=(0, 4), num_runs=2)
+    sigs = {structural_signature(p) for p in spec.expand()}
+    # gamma is data-like and strategy stays traced: all 4 points share
+    # one signature (so J005 groups them and compares programs)
+    assert len(sigs) == 1
+    # a num_runs change is a legitimately different experiment
+    spec8 = SweepSpec.build("sig8", base, axes={"gamma": (0.01,)},
+                            num_runs=8)
+    assert structural_signature(spec8.expand()[0]) not in sigs
+    # structural floats (scan trip counts) split the signature too
+    import dataclasses
+    longer = dataclasses.replace(base, sim_time_s=2.0)
+    spec_t = SweepSpec.build("sigt", longer, axes={"gamma": (0.01,)},
+                             num_runs=2)
+    assert structural_signature(spec_t.expand()[0]) not in sigs
+
+
+@needs_jax
+def test_group_fingerprints_verdicts():
+    sig = (("n", 13), ("num_runs", 2))
+    rows = [(sig, "a", "fp1"), (sig, "b", "fp1"), (sig, "c", "fp2"),
+            ((("n", 26),), "d", "fp3")]
+    groups = {len(g["points"]): g for g in group_fingerprints(rows)}
+    big, lone = groups[3], groups[1]
+    assert not big["stable"] and big["distinct_programs"] == 2
+    assert sorted(big["programs"]["fp1"]) == ["a", "b"]
+    assert lone["stable"] and lone["distinct_programs"] == 1
+
+
+@needs_jax
+def test_j005_true_negative_data_only_sweep_is_stable():
+    """A real data-only sweep over the real simulator: every point must
+    trace the same program (this is the invariant CI's fingerprint step
+    gates; a failure here means a static arg leaked into ``run_sim``)."""
+    from repro.configs.base import SwarmConfig
+    from repro.fleet.sweep import SweepSpec
+    base = SwarmConfig(num_workers=13, sim_time_s=1.0, num_runs=2)
+    spec = SweepSpec.build("tn_gamma", base, axes={"gamma": (0.01, 0.05)},
+                           strategies=(4,), num_runs=2)
+    table = sweep_fingerprint_table(spec)
+    assert table["stable"]
+    assert table["distinct_programs"] == 1
+    assert table["unstable_groups"] == []
+    assert set(table["points"]) == {p.label for p in spec.expand()}
+
+
+@needs_jax
+def test_j005_true_positive_leaked_static_arg(monkeypatch):
+    """The ISSUE's canonical mutation: emulate a sweep whose data-like
+    axis leaks into program structure (fingerprint depends on gamma) and
+    require check_j005 to name the instability.  The leak is injected at
+    the point_fingerprint seam — the exact signal a host-side
+    ``if gamma > x:`` branch in run_sim would produce."""
+    from repro.configs.base import SwarmConfig
+    from repro.fleet.sweep import SweepSpec
+    base = SwarmConfig(num_workers=13, sim_time_s=1.0, num_runs=2)
+    leaky = SweepSpec.build("leaky", base, axes={"gamma": (0.01, 0.05)},
+                            strategies=(4,), num_runs=2)
+    monkeypatch.setattr(fpmod, "_standin_specs", lambda: [leaky])
+    monkeypatch.setattr(fpmod, "point_fingerprint",
+                        lambda p: f"leak-{p.cfg.gamma}")
+    found = list(check_j005({}, REPO))
+    assert len(found) == 1
+    f = found[0]
+    assert f.rule == "J005"
+    assert f.file == "src/repro/fleet/sweep.py"
+    assert f.symbol == "sweep:leaky"
+    assert "2 distinct programs" in f.message
+
+
+@needs_jax
+def test_sweep_fingerprint_table_caps_points(monkeypatch):
+    from repro.configs.base import SwarmConfig
+    from repro.fleet.sweep import SweepSpec
+    base = SwarmConfig(num_workers=13, sim_time_s=1.0, num_runs=2)
+    spec = SweepSpec.build("cap", base,
+                           axes={"gamma": (0.01, 0.02, 0.05)}, num_runs=2)
+    monkeypatch.setattr(fpmod, "point_fingerprint", lambda p: "fp")
+    table = sweep_fingerprint_table(spec, max_points=2)
+    assert table["skipped_points"] == 1
+    assert len(table["points"]) == 2
+
+
+# ---------------------------------------------------------------------------
+# the shipped tree is clean under the jaxpr tier (CI's --tier all gate)
+# ---------------------------------------------------------------------------
+
+
+@needs_jax
+def test_repo_tree_is_clean_under_jaxpr_tier():
+    """`--tier jaxpr` over the committed tree: zero findings beyond the
+    baseline — the tier-2 half of the CI lint gate, self-applied."""
+    findings = run(REPO, tier="jaxpr")
+    assert findings == [], "\n".join(
+        f"{f.file}:{f.line}: {f.rule} [{f.symbol}] {f.message}"
+        for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# SARIF emission (--format sarif, uploaded to code scanning by CI)
+# ---------------------------------------------------------------------------
+
+
+def test_sarif_document_shape():
+    findings = [
+        Finding("R001", "src/repro/a.py", 12, "f:key", "key reuse"),
+        Finding("J002", "src/repro/analysis/jaxpr/targets.py", 0,
+                "sim_dense", "dtype drift"),
+    ]
+    docs = {"R001": RULE_DOCS["R001"], "J002": RULE_DOCS["J002"]}
+    doc = to_sarif(findings, docs, "/repo")
+    assert doc["version"] == SARIF_VERSION
+    (run_,) = doc["runs"]
+    assert run_["tool"]["driver"]["name"] == "swarmlint"
+    assert [r["id"] for r in run_["tool"]["driver"]["rules"]] == \
+        ["J002", "R001"]
+    assert run_["originalUriBaseIds"]["SRCROOT"]["uri"] == "file:///repo/"
+    r1, r2 = run_["results"]
+    assert r1["ruleId"] == "R001"
+    loc = r1["locations"][0]["physicalLocation"]
+    assert loc["artifactLocation"]["uri"] == "src/repro/a.py"
+    assert loc["artifactLocation"]["uriBaseId"] == "SRCROOT"
+    assert loc["region"]["startLine"] == 12
+    # program-level findings (line 0) pin to SARIF's 1-based minimum
+    assert r2["locations"][0]["physicalLocation"]["region"]["startLine"] == 1
+    assert "[sim_dense]" in r2["message"]["text"]
+
+
+def test_sarif_clean_run_still_declares_rules():
+    doc = to_sarif([], {rid: RULE_DOCS[rid] for rid in JAXPR_RULE_IDS},
+                   "/repo")
+    run_ = doc["runs"][0]
+    assert run_["results"] == []
+    assert len(run_["tool"]["driver"]["rules"]) == len(JAXPR_RULE_IDS)
+
+
+def test_sarif_cli_emits_valid_json():
+    res = _cli("--root", os.path.join(FIXTURES, "r001_tn"),
+               "--tier", "ast", "--format", "sarif", "--no-baseline")
+    assert res.returncode == 0, res.stderr
+    doc = json.loads(res.stdout)
+    assert doc["version"] == SARIF_VERSION
+    assert doc["runs"][0]["tool"]["driver"]["name"] == "swarmlint"
+
+
+# ---------------------------------------------------------------------------
+# baseline pruning (--prune-baseline)
+# ---------------------------------------------------------------------------
+
+_BASELINE_TEXT = """\
+# keep this comment
+[[allow]]
+rule = "R001"
+file = "src/repro/live.py"
+symbol = "f:key"
+reason = "still fires"
+
+[[allow]]
+rule = "J001"
+file = "src/repro/dead.py"
+symbol = "gone"
+reason = "the finding was fixed"
+
+[[digest_exempt]]
+field = "label"
+reason = "presentation only"
+"""
+
+
+def test_prune_baseline_text_drops_only_dead_entries_of_run_rules():
+    live = {("R001", "src/repro/live.py", "f:key")}
+    new, dropped = prune_baseline_text(_BASELINE_TEXT, live,
+                                       ["R001", "J001"])
+    assert dropped == [("J001", "src/repro/dead.py", "gone")]
+    bl = parse_baseline(new)
+    assert bl.allows_ == (("R001", "src/repro/live.py", "f:key"),)
+    assert bl.digest_exempt == {"label": "presentation only"}
+    assert "# keep this comment" in new
+
+
+def test_prune_baseline_text_keeps_entries_of_rules_not_run():
+    """A dead J001 entry cannot be proven dead by an ast-only run."""
+    new, dropped = prune_baseline_text(_BASELINE_TEXT, set(), ["R001"])
+    assert dropped == [("R001", "src/repro/live.py", "f:key")]
+    bl = parse_baseline(new)
+    assert ("J001", "src/repro/dead.py", "gone") in bl.allows_
+
+
+def test_prune_baseline_cli_roundtrip(tmp_path):
+    """`--prune-baseline` rewrites the file in place and reports drops;
+    run against a copy of a fixture tree with a synthetic baseline."""
+    import shutil
+    root = tmp_path / "repo"
+    shutil.copytree(os.path.join(FIXTURES, "r001_tn"), root)
+    (root / "analysis_baseline.toml").write_text(_BASELINE_TEXT)
+    res = _cli("--root", str(root), "--tier", "ast", "--prune-baseline")
+    assert res.returncode == 0, res.stderr
+    assert "pruned dead baseline entry: R001" in res.stdout
+    bl = parse_baseline((root / "analysis_baseline.toml").read_text())
+    # the J001 entry survived: its rule did not run under --tier ast
+    assert bl.allows_ == (("J001", "src/repro/dead.py", "gone"),)
+
+
+# ---------------------------------------------------------------------------
+# CLI tier selection contract
+# ---------------------------------------------------------------------------
+
+
+def test_cli_rules_infer_their_tier():
+    res = _cli("--root", os.path.join(FIXTURES, "r001_tn"),
+               "--rules", "R001", "--no-baseline")
+    assert res.returncode == 0, res.stderr
+    assert "swarmlint[ast]" in res.stdout
+
+
+def test_cli_rejects_rules_outside_explicit_tier():
+    res = _cli("--root", os.path.join(FIXTURES, "r001_tn"),
+               "--rules", "J001", "--tier", "ast")
+    assert res.returncode == 2
+    assert "tier" in res.stderr
+
+
+def test_cli_rejects_unknown_rules():
+    res = _cli("--root", os.path.join(FIXTURES, "r001_tn"),
+               "--rules", "J999")
+    assert res.returncode == 2
+    assert "unknown rules" in res.stderr
+
+
+def test_cli_list_rules_covers_both_tiers():
+    res = _cli("--list-rules")
+    assert res.returncode == 0
+    for rid in JAXPR_RULE_IDS:
+        assert f"{rid}  [jaxpr]" in res.stdout
+    assert "R001  [ast]" in res.stdout

@@ -17,7 +17,7 @@ import numpy as np
 import pytest
 
 from repro.configs.base import SwarmConfig
-from repro.fleet import (SweepInterrupted, SweepSpec, ResultStore,
+from repro.fleet import (ResultStore, SweepInterrupted, SweepSpec,
                          build_report, execute, point_digest, run_batch,
                          run_point, write_bench_json)
 from repro.swarm import DISTRIBUTED, LOCAL_ONLY, run_many

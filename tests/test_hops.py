@@ -82,7 +82,7 @@ def test_hops_account_for_every_delivery(hopped):
     per_run = split_runs(hopped["trace_hops"], hops=True)
     tsum = (hopped["avg_transfer_time_s"]
             * np.maximum(hopped["transfers_delivered"], 1.0))
-    for run, s, d in zip(per_run, tsum, hopped["transfers_delivered"]):
+    for run, s, d in zip(per_run, tsum, hopped["transfers_delivered"], strict=True):
         if d > 0:
             assert np.isclose(run["transfer_time_s"].sum(), s, rtol=1e-4)
         assert np.all(np.diff(run["seq"]) > 0)   # scatter-by-seq ordering
@@ -115,7 +115,8 @@ def test_hop_overflow_saturates_capture_exactly():
     # the captured prefix agrees with the uncapped run, record for record
     full = _np(run_batch(KEY, CFG_HOP, jnp.int32(DISTRIBUTED), N, 3))
     for small, big in zip(split_runs(m["trace_hops"], hops=True),
-                          split_runs(full["trace_hops"], hops=True)):
+                          split_runs(full["trace_hops"], hops=True),
+                          strict=True):
         keep = big["seq"] < cap
         for f in schema.HOP_FIELDS:
             np.testing.assert_array_equal(small[f], big[f][keep],
@@ -177,7 +178,7 @@ def _contention_state(cfg, bits, rate):
     st["tx_dst"] = jnp.asarray([2, 2, 0], jnp.int32)
     st["tx_bits"] = jnp.asarray([bits, bits, 0.0], jnp.float32)
     st["tx_start"] = jnp.zeros((3,), jnp.float32)
-    st["tx_count"] = jnp.float32(2)
+    st["tx_count"] = jnp.int32(2)      # event counters carry as i32 (J001)
     if "hop_seq" in st:
         st["hop_seq"] = jnp.asarray([0, 1, 0], jnp.int32)
         st["hop_bits"] = st["tx_bits"]

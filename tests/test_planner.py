@@ -30,7 +30,7 @@ def test_state_ships_with_activation_for_ssm_and_hybrid():
 def test_refinement_never_worse_than_seed():
     cfg = get_config("qwen3-1.7b")
     rng = np.random.default_rng(0)
-    for seed in range(5):
+    for _seed in range(5):
         F = np.maximum(rng.normal(400, 150, 4), 50.0)
         bw = rng.uniform(0.2e9, 2e9, (4, 4))
         s, sc, r, rc = plan_and_refine(cfg, F, bw, objective="throughput")

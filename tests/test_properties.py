@@ -5,9 +5,9 @@ import jax.numpy as jnp
 import numpy as np
 from hypothesis import given, settings
 
-from repro.models.attention import chunked_attention
-from repro.models.common import rope_angles, apply_rope
 from repro.kernels import ref
+from repro.models.attention import chunked_attention
+from repro.models.common import apply_rope, rope_angles
 
 jax.config.update("jax_platform_name", "cpu")
 KEY = jax.random.PRNGKey(0)

@@ -26,7 +26,7 @@ def test_task_conservation(results):
     """generated = completed + remaining-in-system + dropped (approximately:
     remaining is measured in GFLOPs, so convert via the task profile)."""
     profile = make_profile(CFG)
-    for s, m in results.items():
+    for m in results.values():
         gen = np.asarray(m["generated"])
         done = np.asarray(m["completed"])
         drop = np.asarray(m["dropped"])

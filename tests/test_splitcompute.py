@@ -49,7 +49,7 @@ def test_plan_stages_proportional_to_phi():
     F = [100.0, 100.0, 800.0, 100.0]
     plan = plan_stages(cfg, F)
     assert plan.boundaries[0] == 0 and plan.boundaries[-1] == cfg.num_layers
-    assert all(b2 > b1 for b1, b2 in zip(plan.boundaries, plan.boundaries[1:]))
+    assert all(b2 > b1 for b1, b2 in zip(plan.boundaries, plan.boundaries[1:], strict=False))
     # strongest executor gets the first (and largest) stage
     sizes = np.diff(plan.boundaries)
     assert plan.executors[0] == 2

@@ -8,8 +8,8 @@ import pytest
 from repro.checkpoint import latest_step, restore, save
 from repro.data import DataConfig, batch_at
 from repro.optim import OptConfig, apply_updates, init_opt, schedule
-from repro.runtime import (DriverConfig, compress_grads, init_compression,
-                           quantize, dequantize, run_with_restarts)
+from repro.runtime import (DriverConfig, compress_grads, dequantize,
+                           init_compression, quantize, run_with_restarts)
 
 
 # ---------------------------------------------------------------------------

@@ -36,7 +36,7 @@ def test_train_recovers_from_failure_and_loss_decreases():
         faulty, _ = _run(d2, fail_at=13)
         assert int(clean.opt.step) == int(faulty.opt.step) == 24
         for a, b in zip(jax.tree.leaves(clean.params),
-                        jax.tree.leaves(faulty.params)):
+                        jax.tree.leaves(faulty.params), strict=True):
             np.testing.assert_allclose(np.asarray(a, np.float32),
                                        np.asarray(b, np.float32),
                                        rtol=1e-5, atol=1e-6)

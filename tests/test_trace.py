@@ -133,7 +133,7 @@ def test_overflow_counter_saturates_capture_exactly():
     # the captured prefix agrees with the uncapped run, record for record
     full = _np(run_batch(KEY, CFG_TR, jnp.int32(DISTRIBUTED), N, 3))
     for small, big in zip(split_runs(m["trace_records"]),
-                          split_runs(full["trace_records"])):
+                          split_runs(full["trace_records"]), strict=True):
         keep = big["seq"] < cap
         for f in schema.FIELDS:
             np.testing.assert_array_equal(small[f], big[f][keep],
